@@ -1,0 +1,104 @@
+"""C/R cost: the paper's thrashing-cost term, measured on a real TrainState.
+
+Tiers/codecs compared on one snapshot of a ~25M-param training job:
+  mem          — host-DRAM fast tier (the NVM/DCPMM analogue)
+  disk_raw     — durable tier, no compression
+  disk_zstd    — durable tier, zstd-3
+  delta_zstd   — XOR-delta vs previous snapshot + zstd (recurrent C/R)
+  int8_quant   — Pallas ckpt_codec block quantization (fast tier, 4x smaller)
+
+Reported: bytes written and save+restore wall time (single CPU core, so the
+times are indicative; the BYTES are platform-independent and are what the
+roofline-style C/R cost model consumes).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.checkpoint import delta as delta_mod
+from repro.checkpoint.reshard import save_global
+from repro.checkpoint.tiers import DiskTier, MemTier
+from repro.configs import get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
+from repro.kernels.ckpt_codec.ops import dequantize_array, quantize_array
+from repro.models.model import build_model
+from repro.train.state import init_train_state
+from repro.train.steps import TrainConfig, make_train_step
+
+
+def _train_state(steps=3):
+    cfg = get_smoke_config("internlm2-1.8b").replace(
+        d_ff=512, n_layers=4, d_model=256, vocab=8192)
+    model = build_model(cfg, q_chunk=64, kv_chunk=64)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)))
+    step = jax.jit(make_train_step(model, TrainConfig()), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+    states = []
+    for i in range(steps):
+        state, _ = step(state, shard_batch(data.batch_at(i)))
+        states.append(jax.tree.map(lambda a: a.copy(), state))
+    return states
+
+
+def main() -> None:
+    import tempfile
+    from pathlib import Path
+
+    states = _train_state()
+    prev, cur = save_global(states[-2]), save_global(states[-1])
+    total_raw = sum(a.nbytes for a in cur.values())
+    emit("cr_cost/state_bytes_raw", total_raw, "fp32 master + adam moments")
+
+    # mem tier
+    tier = MemTier(8 << 30)
+    t0 = time.perf_counter()
+    tier.save_leaves("s", cur)
+    t_save = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tier.restore("s")
+    t_rest = time.perf_counter() - t0
+    emit("cr_cost/mem_save_ms", t_save * 1e3, f"restore_ms={t_rest*1e3:.1f}")
+
+    tmp = Path(tempfile.mkdtemp())
+    for name, level in (("disk_raw", None), ("disk_zstd", 3)):
+        tier = DiskTier(tmp / name, compress=level)
+        t0 = time.perf_counter()
+        tier.save_leaves("s", cur)
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        tier.restore("s")
+        t_rest = time.perf_counter() - t0
+        emit(f"cr_cost/{name}_bytes", tier.stats.bytes_written,
+             f"save_ms={t_save*1e3:.1f};restore_ms={t_rest*1e3:.1f};"
+             f"ratio={tier.stats.bytes_written/total_raw:.3f}")
+
+    # delta vs previous snapshot
+    t0 = time.perf_counter()
+    blobs, sizes = delta_mod.encode_snapshot(cur, prev)
+    t_enc = time.perf_counter() - t0
+    delta_bytes = sum(sizes.values())
+    emit("cr_cost/delta_zstd_bytes", delta_bytes,
+         f"encode_ms={t_enc*1e3:.1f};ratio={delta_bytes/total_raw:.3f};"
+         f"delta_frac={np.mean([b.is_delta for b in blobs.values()]):.2f}")
+
+    # int8 quantized fast-tier (optimizer moments; error-tolerant)
+    t0 = time.perf_counter()
+    q_bytes = 0
+    for k, a in cur.items():
+        if a.dtype == np.float32 and a.size >= 128:
+            q, s = quantize_array(jnp.asarray(a))
+            q_bytes += q.size + s.size * 4
+        else:
+            q_bytes += a.nbytes
+    t_q = time.perf_counter() - t0
+    emit("cr_cost/int8_quant_bytes", q_bytes,
+         f"encode_ms={t_q*1e3:.1f};ratio={q_bytes/total_raw:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks (CPU interpret mode: correctness-representative
+shapes; wall times are indicative only — the TPU numbers come from the
+roofline analysis, not from this CPU container)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.kernels.ckpt_codec.ops import quantize_array
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mlstm_scan.ops import mlstm_chunked
+from repro.kernels.moe_gmm.ops import expert_swiglu
+from repro.kernels.ssm_scan.ops import selective_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main() -> None:
+    # flash attention, modest shape
+    B, S, H, KVH, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, D), jnp.float32)
+    us = time_us(lambda: flash_attention(q, k, v, block_q=128, block_k=128,
+                                         interpret=True), iters=2)
+    flops = 4 * B * H * S * S * D
+    emit("kernel/flash_attention_us", us, f"shape=b{B}s{S}h{H}d{D};flops={flops}")
+
+    # moe grouped matmul
+    E, C, d, f = 4, 128, 256, 512
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32) * 0.1
+    wg = jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.02
+    wd = jax.random.normal(ks[2], (E, f, d), jnp.float32) * 0.02
+    us = time_us(lambda: expert_swiglu(x, wg, wg, wd, interpret=True), iters=2)
+    emit("kernel/moe_gmm_us", us, f"E{E}C{C}d{d}f{f}")
+
+    # mamba selective scan
+    Bm, Sm, di, dsz = 2, 256, 128, 16
+    delta = jax.nn.softplus(jax.random.normal(ks[0], (Bm, Sm, di))) * 0.1
+    bm = jax.random.normal(ks[1], (Bm, Sm, dsz))
+    cm = jax.random.normal(ks[2], (Bm, Sm, dsz))
+    xm = jax.random.normal(ks[0], (Bm, Sm, di))
+    a = -jnp.exp(jax.random.normal(ks[1], (di, dsz)) * 0.3)
+    h0 = jnp.zeros((Bm, di, dsz))
+    us = time_us(lambda: selective_scan(delta, bm, cm, xm, a, h0, chunk=64,
+                                        block_d=64, interpret=True), iters=1)
+    emit("kernel/ssm_scan_us", us, f"b{Bm}s{Sm}d{di}n{dsz}")
+
+    # mLSTM chunked
+    BH, Sx, dh = 4, 256, 64
+    qx = jax.random.normal(ks[0], (BH, Sx, dh))
+    kx = jax.random.normal(ks[1], (BH, Sx, dh)) / np.sqrt(dh)
+    vx = jax.random.normal(ks[2], (BH, Sx, dh))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[0], (BH, Sx)) + 3)
+    li = jax.random.normal(ks[1], (BH, Sx))
+    us = time_us(lambda: mlstm_chunked(qx, kx, vx, lf, li, chunk=64,
+                                       interpret=True), iters=1)
+    emit("kernel/mlstm_scan_us", us, f"bh{BH}s{Sx}dh{dh}")
+
+    # checkpoint codec throughput
+    xq = jax.random.normal(KEY, (1 << 20,))
+    us = time_us(lambda: quantize_array(xq, interpret=True), iters=2)
+    emit("kernel/ckpt_codec_us", us,
+         f"bytes={xq.nbytes};GBps={xq.nbytes/us/1e3:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Roofline table (deliverable g): reads the dry-run JSON records and emits
+per-(arch x shape x mesh) terms.  Run the dry-run sweep first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def main() -> None:
+    if not RESULTS.exists():
+        emit("roofline/no_dryrun_results", 0, "run repro.launch.dryrun first")
+        return
+    rows = [json.loads(p.read_text()) for p in sorted(RESULTS.glob("*.json"))]
+    ok = [r for r in rows if r["status"] == "ok"]
+    emit("roofline/cells_ok", len(ok), f"of {len(rows)} recorded")
+    for r in ok:
+        name = f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}"
+        if r.get("tag"):
+            name += f"__{r['tag']}"
+        if "roofline" not in r:   # compile-only cells (multi-pod / stragglers)
+            emit(name, 0.0,
+                 f"compile-only;mem_GiB={r['memory']['peak_estimate_bytes']/2**30:.2f}")
+            continue
+        rf = r["roofline"]
+        dominant = rf["bottleneck"]
+        total = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / total if total > 0 else 0.0
+        emit(name, total,
+             f"bottleneck={dominant};compute_s={rf['compute_s']:.4f};"
+             f"memory_s={rf['memory_s']:.4f};coll_s={rf['collective_s']:.4f};"
+             f"MF%={100*(rf['model_flops_ratio'] or 0):.0f};"
+             f"mem_GiB={r['memory']['peak_estimate_bytes']/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fleet-scale scheduler throughput: Python reference vs vectorized JAX.
+
+The JAX simulator is what makes 1000+-node / 10k+-job what-if studies cheap
+(DESIGN SS2) — this benchmark measures ticks/second for both at increasing
+job counts, with the SLURM-style ``pass_depth`` bound for the O(J^2) pass.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import omfs_jax
+from repro.core.simulator import simulate
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+
+def main() -> None:
+    horizon = 200
+    for n_jobs, cpu_total, pass_depth in ((100, 256, None), (400, 1024, 64),
+                                          (2000, 4096, 64)):
+        spec = WorkloadSpec(n_users=8, horizon=horizon, cpu_total=cpu_total,
+                            seed=1, arrival_rate=0.3, mean_work=60)
+        users = make_users(spec)
+        jobs = make_jobs(spec, users)[:n_jobs]
+
+        if n_jobs <= 400:  # Python reference gets slow fast
+            t0 = time.perf_counter()
+            simulate(users, [j.clone() for j in jobs],
+                     SchedulerConfig(cpu_total=cpu_total, quantum=10), horizon)
+            t_py = time.perf_counter() - t0
+            emit(f"sched_scale/python_{n_jobs}jobs_ticks_per_s",
+                 horizon / t_py, f"cpus={cpu_total}")
+
+        cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
+        # compile once
+        tbl, _ = omfs_jax.simulate_jax(users, jobs, cfg, 1, pass_depth)
+        t0 = time.perf_counter()
+        tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth)
+        jax.block_until_ready(busy)
+        t_jax = time.perf_counter() - t0
+        emit(f"sched_scale/jax_{n_jobs}jobs_ticks_per_s", horizon / t_jax,
+             f"cpus={cpu_total};pass_depth={pass_depth};"
+             f"util={float(busy.mean())/cpu_total:.3f}")
+
+
+if __name__ == "__main__":
+    main()

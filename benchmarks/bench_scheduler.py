@@ -1,0 +1,106 @@
+"""Scheduler benchmarks quantifying the paper's qualitative claims.
+
+* utilization / fairness / wait — OMFS vs static / capping / FCFS /
+  backfill / backfill+C/R on identical pooled workloads (paper SII vs SI).
+* reclaim latency — memoryless fairness: entitled demand is served
+  immediately (the "no justified complaints" property).
+* oversubscription — a job larger than its owner's whole entitlement.
+* quantum sweep — C/R-frequency vs responsiveness trade-off (SII).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.baselines import ALL_BASELINES
+from repro.core.metrics import compute_metrics
+from repro.core.simulator import simulate
+from repro.core.types import SchedulerConfig
+from repro.core.workload import (
+    WorkloadSpec,
+    make_jobs,
+    make_users,
+    oversub_scenario,
+    reclaim_scenario,
+)
+
+
+def bench_utilization() -> None:
+    """Paper Table (implied): utilization & fairness per policy."""
+    spec = WorkloadSpec(n_users=4, horizon=1500, cpu_total=128, seed=7,
+                        arrival_rate=0.05, burstiness=1.0)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)
+    cfg = SchedulerConfig(cpu_total=128, quantum=20, cr_overhead=2)
+    res = simulate(users, [j.clone() for j in jobs], cfg, spec.horizon)
+    m = compute_metrics(res)
+    emit("utilization/omfs", m.utilization,
+         f"jain={m.jain_fairness:.3f};wait={m.mean_wait:.1f};ckpt={m.checkpoints}")
+    for name, pol in ALL_BASELINES.items():
+        res = simulate(users, [j.clone() for j in jobs], cfg, spec.horizon,
+                       policy=pol)
+        m = compute_metrics(res)
+        emit(f"utilization/{name}", m.utilization,
+             f"jain={m.jain_fairness:.3f};wait={m.mean_wait:.1f};ckpt={m.checkpoints}")
+
+
+def bench_reclaim_latency() -> None:
+    """Ticks from submit to start for an entitled claim, per policy."""
+    for q in (5, 10, 30):
+        users, jobs, jid = reclaim_scenario(128, quantum=q)
+        cfg = SchedulerConfig(cpu_total=128, quantum=q)
+        res = simulate(users, [j.clone() for j in jobs], cfg, 600)
+        j = res.state.jobs[jid]
+        lat = (j.first_start - j.submit_time) if j.first_start >= 0 else -1
+        emit(f"reclaim_latency/omfs_q{q}", lat, "ticks")
+    # capping baseline never needs reclaim (but also never pooled B's idle!)
+    users, jobs, jid = reclaim_scenario(128, quantum=10)
+    res = simulate(users, [j.clone() for j in jobs],
+                   SchedulerConfig(cpu_total=128, quantum=10), 600,
+                   policy=ALL_BASELINES["fcfs"])
+    j = res.state.jobs[jid]
+    lat = (j.first_start - j.submit_time) if j.first_start >= 0 else 600
+    emit("reclaim_latency/fcfs", lat, "ticks (head-of-line blocking)")
+
+
+def bench_oversub() -> None:
+    """A 75%-of-machine job from a 25% user: runnable under OMFS only."""
+    users, jobs, jid = oversub_scenario(128)
+    for name in ("omfs", "capping", "static_partition"):
+        if name == "omfs":
+            res = simulate(users, [j.clone() for j in jobs],
+                           SchedulerConfig(cpu_total=128, quantum=5), 500)
+        else:
+            res = simulate(users, [j.clone() for j in jobs],
+                           SchedulerConfig(cpu_total=128, quantum=5), 500,
+                           policy=ALL_BASELINES[name])
+        j = res.state.jobs[jid]
+        done = 1.0 if j.finish_time >= 0 and j.state.name == "DONE" else 0.0
+        emit(f"oversub_job_completes/{name}", done,
+             f"start={j.first_start}")
+
+
+def bench_quantum() -> None:
+    """Thrashing vs quantum: preemptions, C/R overhead, reclaim wait."""
+    spec = WorkloadSpec(n_users=4, horizon=1000, cpu_total=128, seed=5,
+                        arrival_rate=0.06, burstiness=1.5)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)
+    for q in (0, 5, 15, 30, 60, 120):
+        cfg = SchedulerConfig(cpu_total=128, quantum=q, cr_overhead=3)
+        res = simulate(users, [j.clone() for j in jobs], cfg, spec.horizon)
+        m = compute_metrics(res)
+        emit(f"quantum_sweep/q{q}_preemptions", m.preemptions,
+             f"util={m.utilization:.3f};overhead={m.cr_overhead_units};"
+             f"wait={m.mean_wait:.1f}")
+
+
+def main() -> None:
+    bench_utilization()
+    bench_reclaim_latency()
+    bench_oversub()
+    bench_quantum()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Shared helpers for the benchmark harness: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    ROWS.append((name, value, derived))
+    print(f"{name},{value:.6g},{derived}")
+
+
+def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    # block on jax outputs if any
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6

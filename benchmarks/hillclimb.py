@@ -1,0 +1,70 @@
+"""Perf-hillclimb runner: A/B a dry-run cell against tuning overrides.
+
+Each experiment re-lowers + re-compiles the cell with a change and reports
+the roofline-term deltas vs. the recorded baseline — the measure step of
+the hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md SSPerf).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell dbrx-132b/train_4k \
+      --tag accum8 --set grad_accum=8
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell glm4-9b/decode_32k \
+      --tag kvshard --cfg decode_kv_shard=true
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import RESULTS_DIR, run_cell
+
+
+def parse_kv(items):
+    out = {}
+    for item in items or []:
+        k, v = item.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = float(v)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="<arch>/<shape>")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", help="tuning overrides k=v "
+                    "(q_chunk, kv_chunk, grad_accum)")
+    ap.add_argument("--cfg", nargs="*", help="ModelConfig overrides k=v")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    arch, shape = args.cell.split("/")
+    override = parse_kv(args.set)
+    cfg_over = parse_kv(args.cfg)
+    if cfg_over:
+        override["cfg"] = cfg_over
+
+    rec = run_cell(arch, shape, args.multi_pod, RESULTS_DIR,
+                   tuning_override=override or None, tag=args.tag)
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    base_path = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}.json"
+    if base_path.exists() and rec.get("status") == "ok":
+        base = json.loads(base_path.read_text())
+        if base.get("status") == "ok":
+            b, n = base["roofline"], rec["roofline"]
+            bm, nm = base["memory"], rec["memory"]
+            print("\n=== delta vs baseline ===")
+            for term in ("compute_s", "memory_s", "collective_s"):
+                if b[term] > 0:
+                    print(f"{term:14s}: {b[term]*1e3:10.1f} -> {n[term]*1e3:10.1f} ms  "
+                          f"({(n[term]/b[term]-1)*100:+.1f}%)")
+            print(f"{'hbm GiB':14s}: {bm['peak_estimate_bytes']/2**30:10.2f} -> "
+                  f"{nm['peak_estimate_bytes']/2**30:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Regenerate the EXPERIMENTS.md roofline table from the dry-run records.
+
+Replaces the <!-- ROOFLINE_TABLE --> marker block in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "benchmarks" / "results" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def table() -> str:
+    rows = [json.loads(p.read_text()) for p in sorted(RESULTS.glob("*.json"))
+            if "__" in p.stem and len(p.stem.split("__")) == 3]
+    lines = [
+        "| arch | shape | mesh | status | HBM GiB/dev | compute ms | memory ms "
+        "| collective ms | bottleneck | MF% |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | - | - | - | - "
+                f"| {r['reason'].split(':')[0]} | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAILED | - | - | - "
+                f"| - | {r.get('error','')[:40]} | - |")
+            continue
+        mem = r["memory"]["peak_estimate_bytes"] / 2**30
+        if "roofline" not in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {mem:.2f} "
+                f"| - | - | - | compile-only | - |")
+            continue
+        rf = r["roofline"]
+        mf = (rf["model_flops_ratio"] or 0) * 100
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {mem:.2f} "
+            f"| {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f} "
+            f"| {rf['collective_s']*1e3:.1f} | {rf['bottleneck']} | {mf:.0f} |")
+    return "\n".join(lines)
+
+
+def main():
+    text = EXP.read_text()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    start = text.index(marker)
+    end = text.index("## S5", start)
+    new = text[: start + len(marker)] + "\n\n" + table() + "\n\n" + text[end:]
+    EXP.write_text(new)
+    print("roofline table updated:", len(table().splitlines()) - 2, "rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark harness entry point: one section per paper claim/table.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [section ...]
+Prints ``name,value,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+
+
+SECTIONS = ("scheduler", "cr_cost", "sched_scale", "kernels", "roofline")
+
+
+def main() -> None:
+    chosen = sys.argv[1:] or SECTIONS
+    print("name,value,derived")
+    for section in chosen:
+        if section == "scheduler":
+            from benchmarks import bench_scheduler
+            bench_scheduler.main()
+        elif section == "cr_cost":
+            from benchmarks import bench_cr_cost
+            bench_cr_cost.main()
+        elif section == "sched_scale":
+            from benchmarks import bench_sched_scale
+            bench_sched_scale.main()
+        elif section == "kernels":
+            from benchmarks import bench_kernels
+            bench_kernels.main()
+        elif section == "roofline":
+            from benchmarks import bench_roofline
+            bench_roofline.main()
+        else:
+            raise SystemExit(f"unknown section {section!r}; know {SECTIONS}")
+
+
+if __name__ == '__main__':
+    main()

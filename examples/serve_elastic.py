@@ -1,0 +1,75 @@
+"""Serving + elastic restart demo.
+
+1. Serve a small LM: batched prefill then a greedy decode loop (the same
+   prefill/decode step functions the dry-run lowers for the decode cells).
+2. Elastic restart: checkpoint the server's weights, "lose" the process,
+   restore onto a fresh template — generations continue identically.
+
+Run:  PYTHONPATH=src python examples/serve_elastic.py
+"""
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, ManagerConfig
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+def build():
+    cfg = ModelConfig(name="serve-lm", family="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=4, d_ff=512,
+                      vocab=2048)
+    return cfg, build_model(cfg, q_chunk=64, kv_chunk=64)
+
+
+def generate(model, params, prompts, steps=16):
+    b, s = prompts.shape
+    cache = model.init_cache(b, s + steps)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    cache, logits = prefill(params, {"tokens": prompts}, cache)
+    toks = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    for _ in range(steps):
+        toks.append(tok)
+        cache, logits = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    return jnp.concatenate(toks, axis=1), b * steps / dt
+
+
+def main():
+    cfg, model = build()
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, cfg.vocab)
+
+    out, tps = generate(model, params, prompts)
+    print(f"served batch of {prompts.shape[0]}: {tps:.0f} tok/s (1 CPU core)")
+    print("generations:\n", np.asarray(out))
+
+    # ---- elastic restart: save, 'crash', restore onto a fresh template ----
+    tmp = Path(tempfile.mkdtemp(prefix="serve_"))
+    mgr = CheckpointManager(ManagerConfig(root=tmp, durable_every=1,
+                                          async_durable=False))
+    mgr.save(0, params)
+    del params                                     # the 'node failure'
+
+    cfg2, model2 = build()                         # fresh process
+    template = model2.param_shapes()
+    params2, name = mgr.restore(template)
+    out2, _ = generate(model2, params2, prompts)
+    same = bool((out == out2).all())
+    print(f"\nrestored from {name}; generations identical: {same}")
+    assert same
+    mgr.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end driver: real LM training under OMFS with live transparent C/R.
+
+Two tenants share one device pool.  Tenant B trains an LM beyond its
+entitlement; tenant A's job arrives mid-run and claims its share — B's job
+is checkpointed to the fast tier, evicted, restored later, and finishes with
+a loss curve **bitwise identical** to an uninterrupted run (verified at the
+end — this is the paper's 'transparent' claim made concrete).
+
+Presets:
+  --preset ci    ~8M params,  60 scheduler ticks   (default; CPU-friendly)
+  --preset full  ~125M params, a few hundred steps (for real accelerators)
+
+Run:  PYTHONPATH=src python examples/train_under_omfs.py [--preset ci]
+"""
+import argparse
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, ManagerConfig
+from repro.cluster.executor import ClusterExecutor, ManagedJob, TrainJob
+from repro.configs.base import ModelConfig
+from repro.core.types import Job, JobClass, JobState, SchedulerConfig, User
+from repro.data.pipeline import DataConfig
+from repro.models.model import build_model, count_params
+from repro.train.steps import TrainConfig
+
+PRESETS = {
+    "ci": dict(d_model=128, n_layers=4, d_ff=512, vocab=2048, seq=64,
+               batch=8, work_b=24, work_a=6, horizon=60, steps_per_tick=2),
+    "full": dict(d_model=768, n_layers=12, d_ff=3072, vocab=8192, seq=256,
+                 batch=32, work_b=150, work_a=50, horizon=400, steps_per_tick=2),
+}
+
+
+def make_job(p, seed):
+    cfg = ModelConfig(
+        name=f"lm-{p['d_model']}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=8, n_kv_heads=4,
+        d_ff=p["d_ff"], vocab=p["vocab"],
+    )
+    model = build_model(cfg, q_chunk=64, kv_chunk=64)
+    n = count_params(cfg)["total"]
+    tcfg = TrainConfig(lr=3e-4, warmup_steps=20, total_steps=5000)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=p["seq"], global_batch=p["batch"],
+                      seed=seed)
+    return TrainJob(model, tcfg, dcfg, seed=seed), n
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=list(PRESETS), default="ci")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    tmp = Path(tempfile.mkdtemp(prefix="omfs_train_"))
+
+    job_b, n_params = make_job(p, seed=1)
+    job_a, _ = make_job(p, seed=2)
+    print(f"model: {n_params/1e6:.1f}M params per tenant job")
+
+    users = [User("A", 50.0), User("B", 50.0)]
+    ex = ClusterExecutor(users, SchedulerConfig(cpu_total=16, quantum=3),
+                         steps_per_tick=p["steps_per_tick"])
+    jb = Job(user="B", cpus=12, work=p["work_b"],
+             job_class=JobClass.CHECKPOINTABLE, submit_time=0)
+    ja = Job(user="A", cpus=8, work=p["work_a"],
+             job_class=JobClass.CHECKPOINTABLE, submit_time=5)
+    mb = ManagedJob(jb, job_b, CheckpointManager(
+        ManagerConfig(root=tmp / "b", durable_every=4)))
+    ma = ManagedJob(ja, job_a, CheckpointManager(
+        ManagerConfig(root=tmp / "a", durable_every=4)))
+    ex.submit(mb)
+    ex.submit(ma)
+    ex.run(p["horizon"])
+
+    print("\nscheduler events:")
+    for e in ex.events:
+        print("  " + e)
+    print(f"\nB: {jb.state.name}, steps={len(job_b.losses)}, "
+          f"checkpoints={mb.checkpoints}, restores={mb.restores}")
+    print(f"A: {ja.state.name}, steps={len(job_a.losses)}")
+    print(f"B loss: first={job_b.losses[0]:.4f} last={job_b.losses[-1]:.4f}")
+
+    # transparency proof: uninterrupted twin
+    ref, _ = make_job(p, seed=1)
+    ref.cold_start()
+    ref_losses = [ref.run_step() for _ in range(len(job_b.losses))]
+    identical = (np.asarray(ref_losses) == np.asarray(job_b.losses)).all()
+    print(f"\npreempted == uninterrupted loss curve (bitwise): {identical}")
+    assert identical, "transparent C/R violated!"
+    assert job_b.losses[-1] < job_b.losses[0], "loss should decrease"
+    print("OK: transparent checkpoint-restart preemption verified.")
+
+
+if __name__ == "__main__":
+    main()

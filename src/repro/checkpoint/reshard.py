@@ -1,0 +1,54 @@
+"""Elastic restore: load a checkpoint onto a different mesh / slice shape.
+
+Checkpoints store *global* arrays keyed by tree path (multi-host would store
+chunk boxes; reassembly is the same code path).  Restore builds the target
+template with ``eval_shape``, then ``device_put``s each global array with the
+target NamedSharding — JAX slices out exactly the shards each device owns.
+
+This is what lets the OMFS executor restart a preempted job on a smaller or
+larger slice (elastic scaling), and a failed job on whatever capacity is
+left (fault tolerance): the training loop is oblivious, it just receives a
+TrainState with the new sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import serialize
+
+
+def restore_resharded(
+    leaves: Dict[str, np.ndarray],
+    template,
+    shardings=None,
+):
+    """Fill ``template`` (ShapeDtypeStructs or arrays) from global leaves,
+    placing each with the matching sharding (pytree like template, or None
+    for default placement)."""
+    shard_by_key = {}
+    if shardings is not None:
+        shard_by_key = {
+            jax.tree_util.keystr(path): s
+            for path, s in jax.tree_util.tree_flatten_with_path(shardings)[0]
+        }
+
+    def put(key, arr, tleaf):
+        dtype = getattr(tleaf, "dtype", arr.dtype)
+        arr = arr.astype(dtype) if arr.dtype != dtype else arr
+        sh = shard_by_key.get(key)
+        if sh is not None:
+            return jax.device_put(arr, sh)
+        return jax.device_put(arr)
+
+    return serialize.fill_template(template, leaves, put=put)
+
+
+def save_global(state) -> Dict[str, np.ndarray]:
+    """Snapshot a (possibly sharded) pytree to host-global numpy arrays.
+
+    With sharded inputs this performs the all-gather-to-host implicitly via
+    ``jax.device_get`` on addressable shards (single-process: full arrays)."""
+    return {k: np.asarray(jax.device_get(v)) for k, v in serialize.leaf_paths(state)}

@@ -1,0 +1,132 @@
+"""Checkpoint serialization: pytree -> per-leaf binary blobs + JSON manifest.
+
+Leaves are keyed by their *tree path* (stable across processes and code
+versions), so restore fills a template pytree produced by ``eval_shape`` —
+the restoring job never needs to unpickle foreign structure.  The manifest
+records shape/dtype/bytes/crc per leaf; a multi-host deployment would write
+per-shard chunks with global-offset boxes (single-process here: one blob per
+leaf; the chunk fields are already in the manifest schema).
+"""
+from __future__ import annotations
+
+import json
+import zlib
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+MANIFEST = "manifest.json"
+
+
+def leaf_paths(tree) -> List[Tuple[str, Any]]:
+    """[(path_key, leaf), ...] with deterministic, readable path keys."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    return np.asarray(jax.device_get(leaf))
+
+
+def save_tree(
+    tree,
+    out_dir: Path,
+    *,
+    compress: Optional[int] = None,      # zstd level, None = raw
+) -> Dict:
+    """Serialize a pytree; returns the manifest dict."""
+    return save_leaf_dict(dict(leaf_paths(tree)), out_dir, compress=compress)
+
+
+def save_leaf_dict(
+    leaves_by_key: Dict[str, Any],
+    out_dir: Path,
+    *,
+    compress: Optional[int] = None,
+) -> Dict:
+    """Serialize an already-flattened {path_key: array} dict (tier promotion
+    path — keys must stay exactly as the original tree produced them)."""
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: Dict[str, Any] = {"leaves": {}, "compress": compress}
+    for i, (key, leaf) in enumerate(sorted(leaves_by_key.items())):
+        arr = _to_numpy(leaf)
+        raw = arr.tobytes()
+        blob = raw
+        if compress and zstd is not None:
+            blob = zstd.ZstdCompressor(level=compress).compress(raw)
+        fname = f"leaf_{i:05d}.bin"
+        (out_dir / fname).write_bytes(blob)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "nbytes_raw": len(raw),
+            "nbytes_stored": len(blob),
+            "crc32": zlib.crc32(raw),
+            # chunk metadata (multi-host layout; single chunk here)
+            "chunks": [{"offset": [0] * arr.ndim, "shape": list(arr.shape)}],
+        }
+    (out_dir / MANIFEST).write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def load_manifest(in_dir: Path) -> Dict:
+    return json.loads((Path(in_dir) / MANIFEST).read_text())
+
+
+def load_leaves(in_dir: Path, *, verify: bool = True) -> Dict[str, np.ndarray]:
+    """path_key -> numpy array (host memory)."""
+    in_dir = Path(in_dir)
+    manifest = load_manifest(in_dir)
+    out = {}
+    for key, meta in manifest["leaves"].items():
+        blob = (in_dir / meta["file"]).read_bytes()
+        if manifest.get("compress") and zstd is not None:
+            blob = zstd.ZstdDecompressor().decompress(blob, max_output_size=meta["nbytes_raw"])
+        if verify and zlib.crc32(blob) != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in {key} ({meta['file']})")
+        out[key] = np.frombuffer(blob, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+    return out
+
+
+def fill_template(template, leaves: Dict[str, np.ndarray], *,
+                  put: Optional[Callable] = None):
+    """Rebuild a pytree from ``leaves`` using ``template``'s structure.
+
+    ``put`` maps (path_key, np_array, template_leaf) -> leaf (default:
+    jnp.asarray with the template dtype) — reshard.py passes a device_put
+    with the target sharding here.
+    """
+    import jax.numpy as jnp
+
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    paths_leaves, treedef = flat
+    rebuilt = []
+    for path, tleaf in paths_leaves:
+        key = jax.tree_util.keystr(path)
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = leaves[key]
+        expect = tuple(getattr(tleaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
+        if put is not None:
+            rebuilt.append(put(key, arr, tleaf))
+        else:
+            rebuilt.append(jnp.asarray(arr, dtype=getattr(tleaf, "dtype", None)))
+    return jax.tree_util.tree_unflatten(treedef, rebuilt)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(tree)
+    )

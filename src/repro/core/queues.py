@@ -1,0 +1,49 @@
+"""Priority queues for Jobs_Submitted and Jobs_Running (lines 5-6).
+
+The paper leaves the prioritization policy open ("FIFO or priority-by-user").
+Both queues are *orderings over the job table*, expressed as key functions,
+so the Python reference and the JAX vectorized scheduler sort by the same
+keys and stay step-equivalent.
+
+Conventions:
+* ``submitted_key``: smaller = dequeued (tried) first.
+* ``running_key``: smaller = evicted first ("least prioritized", line 33),
+  with quantum demotion: jobs running uninterruptedly for >= quantum are
+  demoted (preferred victims).  Jobs still inside their quantum are NOT
+  evictable (paper §II anti-thrashing) — expressed by ``evictable``.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Tuple
+
+from repro.core.types import ClusterState, Job
+
+
+def submitted_key(job: Job) -> Tuple:
+    """FIFO within priority: higher j.priority first, then earlier submit."""
+    return (-job.priority, job.submit_time, job.id)
+
+
+def sorted_pending(state: ClusterState) -> List[Job]:
+    return sorted(state.pending_jobs(), key=submitted_key)
+
+
+def evictable(state: ClusterState, job: Job) -> bool:
+    """A running job may be evicted only after its quantum elapsed."""
+    if not job.job_class.is_preemptable:
+        return False
+    return (state.time - job.run_start) >= state.config.quantum
+
+
+def running_victim_key(job: Job) -> Tuple:
+    """Victim order among evictable jobs: lowest priority first, then the
+    job that has been running longest past its quantum (most demoted),
+    then id for determinism."""
+    return (job.priority, job.run_start, job.id)
+
+
+def sorted_victims(state: ClusterState) -> List[Job]:
+    return sorted(
+        (j for j in state.running_jobs() if evictable(state, j)),
+        key=running_victim_key,
+    )

@@ -1,0 +1,135 @@
+"""Core scheduler types: users, jobs, job classes, events.
+
+Terminology follows the paper: the resource unit is a "CPU" (for the TPU
+adaptation read "chip"; `core.placement` adds slice-shape constraints on
+top of the counts — Algorithm 1 itself only sees counts).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional
+
+
+class JobClass(enum.IntEnum):
+    """Paper §II: non-preemptible jobs run only within the entitlement;
+    preemptible (killable) and checkpointable (C/R-able) jobs may exceed it."""
+
+    NON_PREEMPTIBLE = 0
+    PREEMPTIBLE = 1        # may be killed on eviction
+    CHECKPOINTABLE = 2     # transparently checkpointed on eviction (DMTCP)
+
+    @property
+    def is_preemptable(self) -> bool:
+        return self != JobClass.NON_PREEMPTIBLE
+
+
+class JobState(enum.IntEnum):
+    UNSUBMITTED = 0
+    PENDING = 1
+    RUNNING = 2
+    DONE = 3
+    KILLED = 4             # evicted non-checkpointable job, dropped (line 34)
+
+
+@dataclass(frozen=True)
+class User:
+    """An entity with a CPU entitlement expressed in percent (lines 7-9)."""
+
+    name: str
+    percent: float
+
+    def entitled_cpus(self, cpu_total: int) -> int:
+        # line 22: floor((percent / 100) * CPU_Total)
+        return int((self.percent / 100.0) * cpu_total)
+
+
+_job_ids = itertools.count()
+
+
+@dataclass
+class Job:
+    """A job and its mutable runtime bookkeeping (lines 10-13 + our state)."""
+
+    user: str
+    cpus: int                      # j.CPU_Count
+    work: int                      # total work units (ticks x its CPUs held)
+    priority: int = 0              # j.priority — among the *user's* jobs
+    job_class: JobClass = JobClass.CHECKPOINTABLE
+    submit_time: int = 0
+    id: int = field(default_factory=lambda: next(_job_ids))
+
+    # runtime state
+    state: JobState = JobState.UNSUBMITTED
+    progress: int = 0              # work units completed
+    run_start: int = -1            # tick the current run segment started
+    first_start: int = -1
+    finish_time: int = -1
+    n_preemptions: int = 0
+    n_checkpoints: int = 0
+    overhead: int = 0              # extra work units added by C/R cost
+
+    @property
+    def remaining(self) -> int:
+        return self.work + self.overhead - self.progress
+
+    def clone(self) -> "Job":
+        return replace(self)
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Policy knobs.  Defaults are paper-faithful; flags marked (beyond
+    paper) are extensions measured separately in the benchmarks."""
+
+    cpu_total: int = 256
+    quantum: int = 30              # minimal uninterrupted run before evictable
+    cr_overhead: int = 0           # work units added per checkpoint+restart
+    drop_killed: bool = True       # line 34: non-checkpointable victims are dropped
+    # ---- beyond-paper extensions (all default OFF for fidelity) ----
+    victim_filter_over_entitlement: bool = False   # only evict over-entitlement users
+    avoid_self_eviction: bool = False              # never evict the requester's jobs
+    elastic_shrink: bool = False                   # shrink instead of full eviction
+
+
+@dataclass
+class ClusterState:
+    """The scheduler-visible state (System Init, lines 1-9)."""
+
+    config: SchedulerConfig
+    users: Dict[str, User]
+    jobs: Dict[int, Job] = field(default_factory=dict)
+    time: int = 0
+
+    def __post_init__(self):
+        total = sum(u.percent for u in self.users.values())
+        assert total <= 100.0 + 1e-9, f"entitlements sum to {total} > 100 (line 9)"
+
+    # -- queries used by the runner (lines 19-22) --------------------------
+    def running_jobs(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.RUNNING]
+
+    def pending_jobs(self) -> List[Job]:
+        return [j for j in self.jobs.values() if j.state == JobState.PENDING]
+
+    def cpu_busy(self) -> int:
+        return sum(j.cpus for j in self.running_jobs())
+
+    @property
+    def cpu_idle(self) -> int:
+        return self.config.cpu_total - self.cpu_busy()
+
+    def user_usage(self, user: str) -> Dict[str, int]:
+        p_able = sum(
+            j.cpus for j in self.running_jobs()
+            if j.user == user and j.job_class.is_preemptable
+        )
+        non_p = sum(
+            j.cpus for j in self.running_jobs()
+            if j.user == user and not j.job_class.is_preemptable
+        )
+        return {"preemptable": p_able, "non_preemptable": non_p, "total": p_able + non_p}
+
+    def entitled(self, user: str) -> int:
+        return self.users[user].entitled_cpus(self.config.cpu_total)

@@ -1,0 +1,106 @@
+"""Synthetic workload generation for scheduler benchmarks.
+
+Models the regimes the paper cares about: bursty per-user demand (a user
+suddenly needs its entitlement back), long-tailed job durations, mixed job
+classes, and jobs larger than their owner's whole entitlement (§II: "an
+entity can use it to run a single job that is larger than its whole
+entitlement").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.types import Job, JobClass, User
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    n_users: int = 4
+    horizon: int = 2_000
+    cpu_total: int = 256
+    arrival_rate: float = 0.05       # jobs per tick per user
+    burstiness: float = 0.0          # 0 = Poisson; >0 = on/off bursts
+    mean_work: float = 120.0         # mean job duration in ticks (lognormal)
+    sigma_work: float = 1.0
+    max_cpu_frac: float = 0.5        # max job size as a fraction of cpu_total
+    oversub_prob: float = 0.02       # prob. a job exceeds its user entitlement
+    class_mix: Sequence[float] = (0.2, 0.2, 0.6)  # non-preempt, preempt, ckpt
+    equal_shares: bool = True
+    seed: int = 0
+
+
+def make_users(spec: WorkloadSpec, rng: Optional[np.random.Generator] = None) -> List[User]:
+    rng = rng or np.random.default_rng(spec.seed)
+    if spec.equal_shares:
+        share = 100.0 / spec.n_users
+        return [User(f"u{i}", share) for i in range(spec.n_users)]
+    raw = rng.dirichlet(np.ones(spec.n_users) * 2.0) * 100.0
+    return [User(f"u{i}", float(p)) for i, p in enumerate(raw)]
+
+
+def make_jobs(spec: WorkloadSpec, users: List[User]) -> List[Job]:
+    rng = np.random.default_rng(spec.seed + 1)
+    jobs: List[Job] = []
+    classes = [JobClass.NON_PREEMPTIBLE, JobClass.PREEMPTIBLE, JobClass.CHECKPOINTABLE]
+    for u in users:
+        entitled = max(1, int(u.percent / 100.0 * spec.cpu_total))
+        # on/off burst modulation of the Poisson rate
+        t = 0
+        phase_on = True
+        while t < spec.horizon:
+            rate = spec.arrival_rate * (1 + spec.burstiness if phase_on else
+                                        1 / (1 + spec.burstiness))
+            gap = max(1, int(rng.exponential(1.0 / max(rate, 1e-9))))
+            t += gap
+            if t >= spec.horizon:
+                break
+            if rng.random() < 0.02:
+                phase_on = not phase_on
+            work = max(1, int(rng.lognormal(np.log(spec.mean_work), spec.sigma_work)))
+            if rng.random() < spec.oversub_prob:
+                # a job larger than the user's whole entitlement (paper §II)
+                cpus = int(min(spec.cpu_total * spec.max_cpu_frac, entitled * 2))
+            else:
+                cpus = int(2 ** rng.integers(0, max(1, int(np.log2(entitled)) + 1)))
+            cpus = max(1, min(cpus, int(spec.cpu_total * spec.max_cpu_frac)))
+            job_class = classes[rng.choice(3, p=np.asarray(spec.class_mix))]
+            jobs.append(Job(
+                user=u.name, cpus=cpus, work=work,
+                priority=int(rng.integers(0, 4)),
+                job_class=job_class, submit_time=t,
+            ))
+    return jobs
+
+
+def reclaim_scenario(cpu_total: int = 256, quantum: int = 10):
+    """The paper's headline scenario: user A idles while user B floods the
+    machine with checkpointable jobs; A then submits an entitled job and
+    must get its CPUs back ~immediately (memorylessness).
+
+    Returns (users, jobs, the reclaiming job id)."""
+    users = [User("A", 50.0), User("B", 50.0)]
+    jobs = [
+        Job(user="B", cpus=cpu_total // 4, work=10_000, priority=0,
+            job_class=JobClass.CHECKPOINTABLE, submit_time=0)
+        for _ in range(4)
+    ]
+    # NOTE: the claim is CHECKPOINTABLE, not NON_PREEMPTIBLE: Algorithm 1
+    # line 23 uses ``>=``, so a non-preemptible job *exactly* equal to the
+    # entitlement is always rejected (quirk kept faithfully; see DESIGN.md
+    # and tests/test_omfs.py::test_line23_exact_entitlement_quirk).
+    claim = Job(user="A", cpus=cpu_total // 2, work=200, priority=0,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=quantum + 50)
+    jobs.append(claim)
+    return users, jobs, claim.id
+
+
+def oversub_scenario(cpu_total: int = 256):
+    """A single job larger than its owner's whole entitlement must run when
+    the machine is otherwise idle (paper §II, line 26)."""
+    users = [User("A", 25.0), User("B", 75.0)]
+    big = Job(user="A", cpus=int(cpu_total * 0.75), work=300,
+              job_class=JobClass.CHECKPOINTABLE, submit_time=1)
+    return users, [big], big.id

@@ -1,0 +1,77 @@
+"""Deterministic, resumable, sharded synthetic LM data pipeline.
+
+Transparent C/R requires the data stream to be a pure function of
+``(seed, cursor)`` — restoring a checkpoint's cursor and re-entering the
+loop reproduces the exact token stream a never-preempted run would have
+seen (asserted bitwise in tests/test_e2e_train.py).
+
+The synthetic corpus is a Zipf-ish Markov token stream with enough
+structure for a ~100M-param model to show a decreasing loss curve in the
+e2e example (pure noise would pin the loss at log V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic-structure knobs
+    n_patterns: int = 512          # distinct repeated motifs
+    pattern_len: int = 16
+    zipf_a: float = 1.3
+
+
+class SyntheticLM:
+    """Batch factory: ``batch_at(cursor)`` is a pure function of cursor."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        base = np.random.default_rng(cfg.seed)
+        # motif table: patterns of tokens the stream stitches together
+        self._patterns = base.integers(
+            0, cfg.vocab, size=(cfg.n_patterns, cfg.pattern_len), dtype=np.int32)
+        ranks = np.arange(1, cfg.n_patterns + 1, dtype=np.float64)
+        p = ranks ** (-cfg.zipf_a)
+        self._pattern_p = p / p.sum()
+
+    def batch_at(self, cursor: int) -> Dict[str, np.ndarray]:
+        """The ``cursor``-th global batch: {tokens, labels} [B, S] int32."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed << 20) ^ int(cursor))
+        n_motifs = cfg.seq_len // cfg.pattern_len + 2
+        idx = rng.choice(
+            cfg.n_patterns, size=(cfg.global_batch, n_motifs), p=self._pattern_p)
+        stream = self._patterns[idx].reshape(cfg.global_batch, -1)
+        # light noise so the mapping isn't trivially memorizable
+        noise_mask = rng.random(stream.shape) < 0.05
+        noise = rng.integers(0, cfg.vocab, size=stream.shape, dtype=np.int32)
+        stream = np.where(noise_mask, noise, stream)
+        tokens = stream[:, : cfg.seq_len]
+        labels = stream[:, 1 : cfg.seq_len + 1]
+        return {"tokens": tokens.astype(np.int32), "labels": labels.astype(np.int32)}
+
+    def iterator(self, start_cursor: int = 0) -> Iterator[Tuple[int, Dict[str, np.ndarray]]]:
+        cursor = start_cursor
+        while True:
+            yield cursor, self.batch_at(cursor)
+            cursor += 1
+
+
+def shard_batch(batch: Dict[str, np.ndarray], shardings=None) -> Dict[str, jax.Array]:
+    """Host batch -> device arrays (optionally with explicit shardings)."""
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    return {
+        k: jax.device_put(v, shardings[k]) if k in shardings else jnp.asarray(v)
+        for k, v in batch.items()
+    }

@@ -1,0 +1,193 @@
+"""Per-architecture sharding rules: DP/FSDP on the (pod, data) axes, TP/EP
+on the model axis.
+
+The rules are *path + shape* driven and divisibility-aware: if a dimension
+does not divide by its assigned mesh axes, the assignment degrades to
+replication for that dim (never a compile error) — e.g. kv_heads=2 < 16
+model shards falls back to sharding head_dim instead.  This is what lets a
+single rule set serve all 10 assigned architectures on both the (16,16)
+single-pod and (2,16,16) multi-pod production meshes.
+
+Conventions:
+* default (column-parallel) 2D weight [..., in, out]: in -> FSDP, out -> TP
+* row-parallel weights ({w_o, w_down, w_out}): in -> TP, out -> FSDP
+* MoE expert stacks [L, E, in, out]: E -> TP (expert parallelism), in -> FSDP
+* 1D / norm / scalar leaves: replicated
+* activations/batch: batch dim -> (pod, data)
+* KV caches: batch -> (pod, data); kv_heads -> TP if divisible else head_dim
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+ROW_PARALLEL = {"w_o", "w_down", "w_out"}
+REPLICATED = {"gate_attn", "gate_ffn", "b_gates", "dt_bias", "d_skip"}
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (dp_axes, tp_axis) for our mesh conventions."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data"), "model"
+    return ("data",), "model"
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0 and dim >= _axis_size(mesh, axes)
+
+
+def _leaf_spec(path_names, shape, mesh: Mesh) -> P:
+    """Sharding rule for one parameter leaf."""
+    dp, tp = mesh_axes(mesh)
+    name = path_names[-1] if path_names else ""
+    rank = len(shape)
+
+    if rank <= 1 or name in REPLICATED:
+        return P()
+
+    if name == "embed" or name == "meta":
+        # token-gather tables: shard ONLY d_model over TP so the gather is
+        # shard-local.  (V, d)-doubly-sharded tables trip a GSPMD
+        # dynamic-slice verifier bug when the gather sits inside the
+        # grad-accumulation while loop — observed on dbrx-132b.
+        spec = [None] * rank
+        if _fits(shape[-1], mesh, tp):
+            spec[-1] = tp
+        return P(*spec)
+
+    # stacked-layer leading dims are never sharded; find the matrix dims
+    spec = [None] * rank
+    in_dim, out_dim = rank - 2, rank - 1
+
+    is_expert = rank >= 4 and any("ffn" == p or "moe" in p for p in path_names) \
+        and name in ("w_gate", "w_up", "w_down")
+    if is_expert:
+        # [L, E, in, out]: experts over TP
+        e_dim = rank - 3
+        if _fits(shape[e_dim], mesh, tp):
+            spec[e_dim] = tp
+        if name in ROW_PARALLEL:
+            if _fits(shape[out_dim], mesh, dp):
+                spec[out_dim] = dp
+        else:
+            if _fits(shape[in_dim], mesh, dp):
+                spec[in_dim] = dp
+        return P(*spec)
+
+    if name.startswith("conv"):
+        # depthwise conv [L, W, C]: channels over TP
+        if _fits(shape[out_dim], mesh, tp):
+            spec[out_dim] = tp
+        return P(*spec)
+
+    if name in ROW_PARALLEL:
+        if _fits(shape[in_dim], mesh, tp):
+            spec[in_dim] = tp
+        if _fits(shape[out_dim], mesh, dp):
+            spec[out_dim] = dp
+    else:
+        if _fits(shape[in_dim], mesh, dp):
+            spec[in_dim] = dp
+        if _fits(shape[out_dim], mesh, tp):
+            spec[out_dim] = tp
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_shardings(cfg: ModelConfig, param_shapes, mesh: Mesh):
+    """NamedSharding pytree matching the parameter (or m/v) pytree."""
+
+    def rule(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(_path_names(path), leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def batch_shardings(cfg: ModelConfig, batch_shapes, mesh: Mesh):
+    dp, _tp = mesh_axes(mesh)
+
+    def rule(path, leaf):
+        if leaf.ndim >= 1 and _fits(leaf.shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes, mesh: Mesh):
+    """KV/state caches: [L, B, S, heads, hd] -> batch over DP, heads (or
+    head_dim / latent dim) over TP."""
+    dp, tp = mesh_axes(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        rank = leaf.ndim
+        spec = [None] * rank
+        if rank == 0 or name in ("length",):
+            return NamedSharding(mesh, P())
+        if name == "pos":                       # [B, S]
+            if _fits(shape[0], mesh, dp):
+                spec[0] = dp
+            return NamedSharding(mesh, P(*spec))
+        # stacked caches: [L, B, ...]
+        if rank >= 2 and _fits(shape[1], mesh, dp):
+            spec[1] = dp
+        if name in ("k", "v", "xk", "xv") and rank == 5:
+            if getattr(cfg, "decode_kv_shard", False) and name in ("k", "v") \
+                    and _fits(shape[2], mesh, tp):
+                spec[2] = tp                    # sequence-sharded (flash-decode)
+            elif _fits(shape[3], mesh, tp):     # kv heads
+                spec[3] = tp
+            elif _fits(shape[4], mesh, tp):     # fall back to head_dim
+                spec[4] = tp
+        elif name in ("ckv", "kr") and rank == 4:
+            if _fits(shape[3], mesh, tp):       # latent dim
+                spec[3] = tp
+        elif name in ("ssm_h", "ssm_conv") and rank == 4:
+            if _fits(shape[-1 if name == "ssm_conv" else 2], mesh, tp):
+                spec[-1 if name == "ssm_conv" else 2] = tp
+        elif name in ("c",) and rank == 5:      # mLSTM matrix memory [P,B,H,dh,dh]
+            if _fits(shape[2], mesh, tp):
+                spec[2] = tp
+            elif _fits(shape[3], mesh, tp):
+                spec[3] = tp
+        elif rank >= 3:
+            # generic states ([P,B,H,dh] mlstm n, [P,B,d] slstm, conv tails)
+            for d in range(rank - 1, 1, -1):
+                if _fits(shape[d], mesh, tp):
+                    spec[d] = tp
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: blockwise int8 quantization for fast checkpoints.
+
+The paper attacks C/R thrashing cost with NVM; we additionally shrink the
+bytes: optimizer moments (fp32) quantize to int8 with one fp32 scale per
+128-lane block at <1e-2 relative error — 4x smaller fast-tier snapshots, so
+preemption costs 4x less write bandwidth.  The kernel is a pure streaming
+(memory-bound) op: each grid step loads a [rows, 128] tile from HBM,
+computes the per-row absmax scale in VMEM and stores int8 + scales.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # [rows, LANE]
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (q * s_ref[...][:, None]).astype(x_ref.dtype)
+
+
+def quantize_blocks(x: jax.Array, *, rows_per_step: int = 1024,
+                    interpret: bool = False):
+    """x: [R, 128] fp32 -> (int8 [R, 128], scales fp32 [R])."""
+    r, lane = x.shape
+    assert lane == LANE
+    rows = min(rows_per_step, r)
+    grid = (pl.cdiv(r, rows),)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, LANE), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, LANE), jnp.int8),
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *,
+                      rows_per_step: int = 1024, out_dtype=jnp.float32,
+                      interpret: bool = False):
+    r, lane = q.shape
+    rows = min(rows_per_step, r)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(pl.cdiv(r, rows),),
+        in_specs=[
+            pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, LANE), out_dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,45 @@
+"""Public API: quantize/dequantize arbitrary pytree leaves for the fast
+checkpoint tier.  Pads flat arrays to the 128-lane layout, runs the Pallas
+codec (interpret on CPU), and exposes round-trip helpers used by
+checkpoint.manager when ``quantize_fast_tier`` is enabled."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ckpt_codec.kernel import LANE, dequantize_blocks, quantize_blocks
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_array(x: jax.Array, *, interpret: Optional[bool] = None):
+    """Any-shape fp array -> (int8 [R,128], scales [R], meta) round-trippable."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // LANE)
+    flat = jnp.pad(flat, (0, rows * LANE - n)).reshape(rows, LANE)
+    q, s = quantize_blocks(flat.astype(jnp.float32), interpret=interpret)
+    return q, s
+
+
+@partial(jax.jit, static_argnames=("shape", "dtype", "interpret"))
+def dequantize_array(q, s, *, shape, dtype=jnp.float32,
+                     interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    flat = dequantize_blocks(q, s, out_dtype=dtype, interpret=interpret)
+    n = int(np.prod(shape)) if shape else 1
+    return flat.reshape(-1)[:n].reshape(shape)
+
+
+def roundtrip_error(x: jax.Array) -> float:
+    """Max relative error of one quantize/dequantize round trip."""
+    q, s = quantize_array(x)
+    y = dequantize_array(q, s, shape=x.shape, dtype=x.dtype)
+    denom = jnp.maximum(jnp.abs(x).max(), 1e-12)
+    return float(jnp.abs(y - x).max() / denom)

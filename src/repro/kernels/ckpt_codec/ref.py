@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the checkpoint int8 block codec."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+
+def quantize_ref(x: jax.Array):
+    """x [R, 128] -> (int8 [R, 128], scales [R])."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scales[:, None]).astype(out_dtype)

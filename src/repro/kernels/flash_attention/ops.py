@@ -1,0 +1,78 @@
+"""Jit'd public wrapper around the flash-attention Pallas kernel.
+
+Handles layout (model-stack [B, S, H, D] <-> kernel [B*H, S, D]), head-dim
+padding to the 128-lane MXU width, and backend selection: the Pallas kernel
+on TPU, interpret-mode on CPU (correctness validation), with the pure-jnp
+reference available for differentiation (the kernel is forward-only; the
+training path uses the rematerialized chunked-jnp attention in
+`repro.models.attention`).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_head_dim(x: jax.Array, multiple: int = 128):
+    d = x.shape[-1]
+    target = -(-d // multiple) * multiple
+    if target == d:
+        return x, d
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, target - d)]
+    return jnp.pad(x, pad), d
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "n_meta", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,       # [B, Sq, H, D] (model-stack layout)
+    k: jax.Array,       # [B, Skv, KVH, D]
+    v: jax.Array,       # [B, Skv, KVH, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    n_meta: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    sm_scale = d ** -0.5  # scale by the TRUE head dim, not the padded one
+
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * kvh, k.shape[1], d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * kvh, v.shape[1], d)
+    qt, _ = _pad_head_dim(qt)
+    kt, _ = _pad_head_dim(kt)
+    vt, _ = _pad_head_dim(vt)
+
+    out = flash_attention_fwd(
+        qt, kt, vt, group=group, causal=causal, window=window, n_meta=n_meta,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    out = out[..., :d].reshape(b, h, sq, d)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def flash_attention_reference(q, k, v, *, causal=True, window=0, n_meta=0):
+    """Same layout contract as ``flash_attention`` but the jnp oracle."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * kvh, k.shape[1], d)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * kvh, v.shape[1], d)
+    out = attention_ref(
+        qt, kt, vt, group=h // kvh, causal=causal, window=window, n_meta=n_meta)
+    return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive full-scores)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,       # [BH, Sq, d]
+    k: jax.Array,       # [BKV, Skv, d]
+    v: jax.Array,       # [BKV, Skv, d]
+    *,
+    group: int,
+    causal: bool = True,
+    window: int = 0,
+    n_meta: int = 0,
+    sm_scale: Optional[float] = None,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    s = s * sm_scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    vis = jnp.ones((sq, skv), bool)
+    if causal:
+        vis &= k_pos <= q_pos
+    if window > 0:
+        in_win = (q_pos - k_pos) < window
+        if n_meta > 0:
+            in_win |= k_pos < n_meta
+        vis &= in_win
+    s = jnp.where(vis[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the chunked mLSTM kernel (interpret on CPU)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.mlstm_scan.kernel import mlstm_scan
+from repro.kernels.mlstm_scan.ref import mlstm_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunked(q, k, v, lf, li, *, chunk: int = 256,
+                  interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return mlstm_scan(q, k, v, lf, li, chunk=chunk, interpret=interpret)
+
+
+mlstm_reference = mlstm_scan_ref

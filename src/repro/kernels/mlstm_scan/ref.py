@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: sequential stabilized mLSTM recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_scan_ref(q, k, v, lf, li):
+    """q/k/v: [BH, S, dh] (k pre-scaled); lf/li: [BH, S].
+    Zero initial state.  Returns (h [BH,S,dh], (C, n, m))."""
+    bh, s, dh = q.shape
+    c0 = jnp.zeros((bh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((bh, dh), jnp.float32)
+    m0 = jnp.full((bh,), -1e30, jnp.float32)
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, lft, lit = [a.astype(jnp.float32) for a in inp]
+        m_new = jnp.maximum(lft + m, lit)
+        i_g = jnp.exp(lit - m_new)[:, None, None]
+        f_g = jnp.exp(lft + m - m_new)[:, None, None]
+        c = f_g * c + i_g * vt[:, :, None] * kt[:, None, :]
+        n = f_g[:, :, 0] * n + i_g[:, :, 0] * kt
+        num = jnp.einsum("bde,be->bd", c, qt)
+        qn = jnp.einsum("bd,bd->b", n, qt)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        h = num / denom[:, None]
+        return (c, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, lf, li))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (c, n, m[:, None])

@@ -1,0 +1,37 @@
+"""Jit'd wrapper: expert-capacity SwiGLU using the grouped-matmul kernel.
+
+Used by distributed.moe_ep on TPU in place of ragged_dot when the capacity
+layout is dense (kernel path); interpret-mode on CPU for validation."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import grouped_matmul
+from repro.kernels.moe_gmm.ref import grouped_matmul_ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def expert_swiglu(
+    x: jax.Array,        # [E, C, d] capacity buffers
+    w_gate: jax.Array,   # [E, d, f]
+    w_up: jax.Array,     # [E, d, f]
+    w_down: jax.Array,   # [E, f, d]
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    gate = grouped_matmul(x, w_gate.astype(x.dtype), interpret=interpret)
+    up = grouped_matmul(x, w_up.astype(x.dtype), interpret=interpret)
+    h = jax.nn.silu(gate) * up
+    return grouped_matmul(h, w_down.astype(x.dtype), interpret=interpret)
+
+
+def expert_swiglu_ref(x, w_gate, w_up, w_down):
+    gate = grouped_matmul_ref(x, w_gate.astype(x.dtype))
+    up = grouped_matmul_ref(x, w_up.astype(x.dtype))
+    return grouped_matmul_ref(jax.nn.silu(gate) * up, w_down.astype(x.dtype))

@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the selective-scan kernel (interpret on CPU)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan(delta, b, c, x, a, h0, *, chunk: int = 128,
+                   block_d: int = 512, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssm_scan(delta, b, c, x, a, h0, chunk=chunk, block_d=block_d,
+                    interpret=interpret)
+
+
+selective_scan_ref = ssm_scan_ref

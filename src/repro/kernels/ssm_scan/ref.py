@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the mamba selective scan (sequential over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(delta, b, c, x, a, h0):
+    """delta/x: [B,S,di]; b/c: [B,S,ds]; a: [di,ds]; h0: [B,di,ds].
+    Returns (y [B,S,di], h_final)."""
+
+    def step(h, inp):
+        dl, bt, ct, xt = inp
+        decay = jnp.exp(dl[:, :, None] * a)
+        h = decay * h + (dl * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in (delta, b, c, x))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(delta.dtype), h

@@ -1,0 +1,66 @@
+"""Cluster-simulation launcher: OMFS (or a baseline) on a synthetic fleet.
+
+  PYTHONPATH=src python -m repro.launch.cluster_sim --policy omfs \
+      --chips 1024 --tenants 6 --horizon 800 --jax
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import omfs_jax
+from repro.core.baselines import ALL_BASELINES
+from repro.core.metrics import compute_metrics
+from repro.core.simulator import simulate
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="omfs",
+                    choices=["omfs"] + list(ALL_BASELINES))
+    ap.add_argument("--chips", type=int, default=1024)
+    ap.add_argument("--tenants", type=int, default=6)
+    ap.add_argument("--horizon", type=int, default=800)
+    ap.add_argument("--quantum", type=int, default=20)
+    ap.add_argument("--cr-overhead", type=int, default=2)
+    ap.add_argument("--arrival-rate", type=float, default=0.08)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--jax", action="store_true",
+                    help="vectorized lax simulator (omfs only)")
+    args = ap.parse_args(argv)
+
+    spec = WorkloadSpec(n_users=args.tenants, horizon=args.horizon,
+                        cpu_total=args.chips, seed=args.seed,
+                        arrival_rate=args.arrival_rate)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)
+    cfg = SchedulerConfig(cpu_total=args.chips, quantum=args.quantum,
+                          cr_overhead=args.cr_overhead)
+    print(f"{len(jobs)} jobs, {args.tenants} tenants, {args.chips} chips, "
+          f"policy={args.policy}")
+
+    if args.jax:
+        assert args.policy == "omfs", "JAX path implements OMFS"
+        tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, args.horizon,
+                                          pass_depth=64)
+        busy = np.asarray(busy)
+        t = np.asarray(tbl.state)
+        print(f"utilization {busy.mean()/args.chips:.3f} | done "
+              f"{(t==omfs_jax.DONE).sum()} | killed {(t==omfs_jax.KILLED).sum()} "
+              f"| checkpoints {int(np.asarray(tbl.n_ckpt).sum())}")
+        return
+
+    policy = ALL_BASELINES.get(args.policy)
+    if policy is None:
+        res = simulate(users, jobs, cfg, args.horizon)
+    else:
+        res = simulate(users, jobs, cfg, args.horizon, policy=policy)
+    m = compute_metrics(res)
+    print(f"utilization {m.utilization:.3f} | jain {m.jain_fairness:.3f} | "
+          f"wait {m.mean_wait:.1f} | preemptions {m.preemptions} | "
+          f"checkpoints {m.checkpoints} | killed {m.killed_jobs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+    " --xla_force_host_platform_device_count=512"
+)
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape x mesh) cell: build the full-size
+config, lower the appropriate step function with production shardings,
+``.compile()`` it, and record memory analysis, cost analysis, and the
+roofline terms.  ShapeDtypeStruct stand-ins only — nothing is allocated at
+full size.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+the device count at first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+  PYTHONPATH=src python -m repro.launch.dryrun --report   # print the table
+"""
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS lines
+# above must be the first statements in the file.
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES_BY_NAME, cell_is_applicable, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model, model_flops_per_step
+from repro.roofline import analysis as roofline
+from repro.train.state import train_state_shapes
+from repro.train.steps import TrainConfig, make_decode_step, make_prefill_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+# per-shape attention chunk sizes + grad accumulation (activation-memory knobs)
+SHAPE_TUNING = {
+    "train_4k": dict(q_chunk=2048, kv_chunk=2048, grad_accum=4),
+    "prefill_32k": dict(q_chunk=2048, kv_chunk=2048, grad_accum=1),
+    "decode_32k": dict(q_chunk=1024, kv_chunk=1024, grad_accum=1),
+    "long_500k": dict(q_chunk=1024, kv_chunk=1024, grad_accum=1),
+}
+
+
+def _layer_unit(cfg):
+    """Smallest depth step preserving the arch's layer-group structure."""
+    if cfg.family == "vlm":
+        return cfg.vision.cross_attn_every
+    if cfg.family == "ssm":
+        return cfg.xlstm.slstm_every
+    return 1
+
+
+def build_cell(arch: str, shape_name: str, mesh, tuning_override=None,
+               costing: bool = False, depth_override=None):
+    """Returns (lowered, n_devices, model_flops, accum) for one cell.
+
+    Two build modes:
+    * production (``costing=False``): scans + remat + grad accumulation —
+      the deployable artifact; its ``memory_analysis()`` is authoritative.
+    * costing (``costing=True``): layer scans unrolled, single-trip
+      attention chunking, accum=1 with a microbatch-sized global batch —
+      XLA cost_analysis counts while-loop bodies ONCE, so only this build
+      yields correct FLOPs/bytes/collective totals.  ``depth_override``
+      reduces n_layers: run_cell lowers TWO shallow variants and
+      extrapolates cost(L) = base + L * per_layer to the true depth
+      (all per-layer costs are depth-independent), keeping the unrolled
+      compile tractable for 62-layer archs.
+    """
+    cfg = get_config(arch)
+    if depth_override is not None:
+        cfg = cfg.replace(n_layers=depth_override)
+    shape = SHAPES_BY_NAME[shape_name]
+    tune = dict(SHAPE_TUNING[shape_name])
+    if tuning_override:
+        extra = dict(tuning_override)
+        cfg_over = extra.pop("cfg", {})
+        if cfg_over:
+            cfg = cfg.replace(**cfg_over)
+        tune.update(extra)
+    accum = tune["grad_accum"] if shape.kind == "train" else 1
+    if costing:
+        seq = shape.seq_len
+        model = build_model(cfg, q_chunk=seq, kv_chunk=seq, unroll=True)
+        if accum > 1:
+            shape = dataclasses.replace(shape, global_batch=shape.global_batch // accum)
+    else:
+        model = build_model(cfg, q_chunk=tune["q_chunk"], kv_chunk=tune["kv_chunk"])
+    batch_shapes = model.input_specs(shape)
+    batch_sh = shd.batch_shardings(cfg, batch_shapes, mesh)
+
+    if shape.kind == "train":
+        state_shapes = train_state_shapes(model)
+        p_sh = shd.param_shardings(cfg, state_shapes.params, mesh)
+        state_sh = state_shapes._replace(
+            params=p_sh,
+            opt=state_shapes.opt._replace(
+                step=shd.replicated(mesh, state_shapes.opt.step),
+                m=shd.param_shardings(cfg, state_shapes.opt.m, mesh),
+                v=shd.param_shardings(cfg, state_shapes.opt.v, mesh),
+            ),
+            rng=shd.replicated(mesh, state_shapes.rng),
+            data_cursor=shd.replicated(mesh, state_shapes.data_cursor),
+        )
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(mesh, P())
+        step = make_train_step(
+            model, TrainConfig(grad_accum=1 if costing else accum))
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, repl),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch_shapes)
+    else:
+        params_shapes = model.param_shapes()
+        p_sh = shd.param_shardings(cfg, params_shapes, mesh)
+        cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cache_sh = shd.cache_shardings(cfg, cache_shapes, mesh)
+        if shape.kind == "prefill":
+            step = make_prefill_step(model)
+            with jax.set_mesh(mesh):
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_sh, batch_sh, cache_sh),
+                    out_shardings=(cache_sh, None),
+                    donate_argnums=(2,),
+                ).lower(params_shapes, batch_shapes, cache_shapes)
+        else:
+            step = make_decode_step(model)
+            tok_sh = shd.batch_shardings(cfg, {"tokens": batch_shapes["tokens"]}, mesh)["tokens"]
+            with jax.set_mesh(mesh):
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_sh, cache_sh, tok_sh),
+                    out_shardings=(cache_sh, None),
+                    donate_argnums=(1,),
+                ).lower(params_shapes, cache_shapes, batch_shapes["tokens"])
+
+    mflops = model_flops_per_step(
+        cfg, SHAPES_BY_NAME[shape_name], backward=(shape.kind == "train"))
+    return lowered, mesh.size, mflops, accum
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             tuning_override=None, tag: str = "", costing: bool = True) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{cell_id}.json"
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "status": "skipped", "reason": why,
+    }
+    if not ok:
+        out_path.write_text(json.dumps(record, indent=2))
+        print(f"SKIP {cell_id}: {why}")
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # 1. production compile: the deployable artifact; memory analysis
+        lowered, n_dev, mflops, accum = build_cell(
+            arch, shape_name, mesh, tuning_override)
+        compiled = lowered.compile()
+        t_prod = time.time() - t0
+        mem = roofline.memory_stats(compiled)
+        del lowered, compiled
+        if not costing:
+            # multi-pod cells: compile success + memory is the deliverable;
+            # the roofline table is single-pod only (assignment SSRoofline)
+            record.update({
+                "status": "ok", "n_devices": n_dev, "grad_accum": accum,
+                "compile_s": round(t_prod, 1), "memory": mem,
+            })
+            print(f"OK   {cell_id}: compile={t_prod:.0f}s "
+                  f"mem/dev={mem['peak_estimate_bytes']/2**30:.2f}GiB (no costing)")
+            out_path.write_text(json.dumps(record, indent=2))
+            return record
+        # 2. costing compiles: unrolled shallow variants at depths (a, b),
+        #    extrapolated linearly to the true depth L (per-layer costs are
+        #    depth-independent; base = embed/CE/optimizer-scalars).
+        t1 = time.time()
+        cfg_full = get_config(arch)
+        unit = _layer_unit(cfg_full)
+        l_full = cfg_full.n_layers
+        a = min(2 * unit, l_full)
+        b = min(4 * unit, l_full)
+        if b <= a:  # very shallow arch: single exact costing compile
+            lowered_c, _, _, _ = build_cell(
+                arch, shape_name, mesh, tuning_override, costing=True)
+            compiled_c = lowered_c.compile()
+            rf = roofline.analyze(
+                compiled_c, compiled_c.as_text(), n_devices=n_dev,
+                model_flops=mflops, cost_scale=float(accum))
+            extrapolated = False
+        else:
+            costs = {}
+            for depth in (a, b):
+                lowered_c, _, _, _ = build_cell(
+                    arch, shape_name, mesh, tuning_override, costing=True,
+                    depth_override=depth)
+                compiled_c = lowered_c.compile()
+                costs[depth] = roofline.raw_costs(compiled_c)
+                del lowered_c, compiled_c
+            rf = roofline.analyze_extrapolated(
+                costs[a], costs[b], a, b, l_full,
+                n_devices=n_dev, model_flops=mflops, cost_scale=float(accum))
+            extrapolated = True
+        t_cost = time.time() - t1
+        record.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "grad_accum": accum,
+            "costing_extrapolated": extrapolated,
+            "compile_s": round(t_prod, 1),
+            "costing_compile_s": round(t_cost, 1),
+            "memory": mem,
+            "roofline": rf.row(),
+            "coll_breakdown": rf.coll_breakdown,
+        })
+        print(f"OK   {cell_id}: compile={t_prod:.0f}s+{t_cost:.0f}s "
+              f"mem/dev={mem['peak_estimate_bytes']/2**30:.2f}GiB "
+              f"terms(c/m/coll)={rf.compute_s*1e3:.1f}/{rf.memory_s*1e3:.1f}/"
+              f"{rf.collective_s*1e3:.1f}ms bottleneck={rf.bottleneck} "
+              f"MF%={(rf.model_flops_ratio or 0)*100:.0f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record.update({"status": "failed", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+        print(f"FAIL {cell_id}: {type(e).__name__}: {str(e)[:200]}")
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def report(out_dir: Path) -> None:
+    rows = []
+    for p in sorted(out_dir.glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+    fmt = "{:<22s} {:<12s} {:<8s} {:<8s} {:>9s} {:>8s} {:>8s} {:>8s} {:<10s} {:>6s}"
+    print(fmt.format("arch", "shape", "mesh", "status", "mem GiB",
+                     "comp ms", "mem ms", "coll ms", "bottleneck", "MF%"))
+    for r in rows:
+        if r["status"] != "ok":
+            print(fmt.format(r["arch"], r["shape"], r["mesh"], r["status"],
+                             "-", "-", "-", "-", r.get("reason", r.get("error", ""))[:30], "-"))
+            continue
+        if "roofline" not in r:
+            print(fmt.format(r["arch"], r["shape"], r["mesh"], r["status"],
+                             f"{r['memory']['peak_estimate_bytes']/2**30:.2f}",
+                             "-", "-", "-", "compile-only", "-"))
+            continue
+        rf = r["roofline"]
+        print(fmt.format(
+            r["arch"], r["shape"], r["mesh"], r["status"],
+            f"{r['memory']['peak_estimate_bytes']/2**30:.2f}",
+            f"{rf['compute_s']*1e3:.1f}", f"{rf['memory_s']*1e3:.1f}",
+            f"{rf['collective_s']*1e3:.1f}", rf["bottleneck"],
+            f"{(rf['model_flops_ratio'] or 0)*100:.0f}",
+        ))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--out", type=Path, default=RESULTS_DIR)
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-costing", action="store_true",
+                    help="production compile only (multi-pod sweeps)")
+    args = ap.parse_args(argv)
+
+    args.out.mkdir(parents=True, exist_ok=True)
+    if args.report:
+        report(args.out)
+        return
+
+    meshes = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES_BY_NAME:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if args.skip_existing:
+            p = args.out / f"{arch}__{shape}__{mesh_name}.json"
+            if p.exists() and json.loads(p.read_text()).get("status") in ("ok", "skipped"):
+                continue
+        run_cell(arch, shape, mp, args.out,
+                 costing=not (args.no_costing or mp))
+
+
+if __name__ == "__main__":
+    main()

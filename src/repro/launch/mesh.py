@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before first jax init; tests and benches see
+the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Debug mesh over whatever devices exist (tests run with 1-8 CPUs)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~100GB/s bidi / 2)
+ICI_LINKS_2D = 4                  # 2D torus: 4 links per chip (x+,x-,y+,y-)

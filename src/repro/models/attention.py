@@ -1,0 +1,256 @@
+"""Attention: memory-efficient chunked attention + GQA/MLA/cross variants.
+
+Design notes
+------------
+* ``chunked_attention`` is the single training/prefill attention primitive.
+  It is a pure-``lax`` flash-attention (online softmax over KV chunks inside
+  a scan over Q chunks) so the HLO **never materializes [Sq, Skv]** — this is
+  what makes the 32k-prefill dry-run cells compile with sane memory.  The
+  Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-target
+  version of the same math; this module is also its ``ref``erence oracle.
+* ``decode_attention`` attends one (or few) query tokens against a padded KV
+  cache — scores are [B, H, Skv], no chunking needed.
+* Visibility is computed from explicit *position* arrays, which uniformly
+  encodes causal masks, sliding windows, always-visible meta tokens
+  (Hymba), cache padding, and cross-attention (no mask).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def visibility_mask(
+    q_pos: jax.Array,        # [..., Sq] int32
+    kv_pos: jax.Array,       # [..., Skv] int32 (-1 marks invalid cache slots)
+    *,
+    causal: bool,
+    window: int = 0,
+    n_meta: int = 0,
+) -> jax.Array:
+    """Boolean [..., Sq, Skv] visibility."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    vis = kp >= 0
+    if causal:
+        vis = jnp.logical_and(vis, kp <= qp)
+    if window > 0:
+        in_window = (qp - kp) < window
+        if n_meta > 0:
+            in_window = jnp.logical_or(in_window, kp < n_meta)
+        vis = jnp.logical_and(vis, in_window)
+    return vis
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int, value=0.0):
+    n = x.shape[axis]
+    target = -(-n // multiple) * multiple
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad, constant_values=value), n
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "n_meta", "q_chunk", "kv_chunk"),
+)
+def chunked_attention(
+    q: jax.Array,             # [B, Sq, H, Dk]
+    k: jax.Array,             # [B, Skv, KVH, Dk]
+    v: jax.Array,             # [B, Skv, KVH, Dv]
+    q_pos: jax.Array,         # [B, Sq] int32
+    kv_pos: jax.Array,        # [B, Skv] int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    n_meta: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention; returns [B, Sq, H, Dv] in q.dtype.
+
+    GQA: H must be a multiple of KVH.  fp32 softmax accumulation.
+    """
+    B, Sq, H, Dk = q.shape
+    _, Skv, KVH, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(Dk)
+    out_dtype = q.dtype
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+
+    q, _ = _pad_axis(q, 1, q_chunk)
+    q_pos_p, _ = _pad_axis(q_pos, 1, q_chunk, value=0)
+    k, _ = _pad_axis(k, 1, kv_chunk)
+    v, _ = _pad_axis(v, 1, kv_chunk)
+    kv_pos_p, _ = _pad_axis(kv_pos, 1, kv_chunk, value=-1)  # padded slots invisible
+
+    nq = q.shape[1] // q_chunk
+    nk = k.shape[1] // kv_chunk
+
+    # [B, nq, qc, KVH, G, Dk] etc.
+    qr = q.reshape(B, nq, q_chunk, KVH, G, Dk)
+    qpr = q_pos_p.reshape(B, nq, q_chunk)
+    kr = k.reshape(B, nk, kv_chunk, KVH, Dk)
+    vr = v.reshape(B, nk, kv_chunk, KVH, Dv)
+    kpr = kv_pos_p.reshape(B, nk, kv_chunk)
+
+    def one_q_chunk(qc, qp):
+        """qc: [B, qc, KVH, G, Dk]; qp: [B, qc] -> [B, qc, KVH, G, Dv]."""
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kp = inp                      # [B,ck,KVH,Dk], [B,ck,KVH,Dv], [B,ck]
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc", qc, kc, preferred_element_type=jnp.float32
+            ) * scale                              # [B,KVH,G,qc,ck]
+            vis = visibility_mask(qp, kp, causal=causal, window=window, n_meta=n_meta)
+            s = jnp.where(vis[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kr, 1, 0),
+                jnp.moveaxis(vr, 1, 0),
+                jnp.moveaxis(kpr, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1).astype(out_dtype)  # [B, qc, KVH, G, Dv]
+
+    # remat each q-chunk: backward recomputes the inner KV scan, so residual
+    # memory is O(Sq * Dv) instead of O(Sq * Skv).
+    one_q_chunk = jax.checkpoint(one_q_chunk)
+
+    def scan_q(_, inp):
+        qc, qp = inp
+        return None, one_q_chunk(qc, qp)
+
+    _, outs = jax.lax.scan(
+        scan_q, None, (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(qpr, 1, 0))
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jax.Array,            # [B, Tq, H, Dk]   (Tq small, usually 1)
+    k_cache: jax.Array,      # [B, S, KVH, Dk]
+    v_cache: jax.Array,      # [B, S, KVH, Dv]
+    q_pos: jax.Array,        # [B, Tq] int32
+    kv_pos: jax.Array,       # [B, S] int32 (-1 = empty slot)
+    *,
+    window: int = 0,
+    n_meta: int = 0,
+) -> jax.Array:
+    """Single/few-token attention against a padded KV cache -> [B, Tq, H, Dv]."""
+    B, Tq, H, Dk = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(Dk)
+    qr = q.reshape(B, Tq, KVH, G, Dk)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qr, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    vis = visibility_mask(q_pos, kv_pos, causal=True, window=window, n_meta=n_meta)
+    s = jnp.where(vis[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # no preferred_element_type: bf16xbf16->f32 batched dots are unimplemented
+    # in the XLA:CPU thunk runtime; p is normalized so bf16 output is safe.
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, Tq, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache.
+
+    k, v: [L, B, S, KVH, D]; pos: [B, S] int32 slot positions (-1 empty);
+    length: [] int32 — write cursor (same for all batch rows).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    pos: jax.Array
+    length: jax.Array
+
+    @staticmethod
+    def init(n_layers, batch, max_seq, n_kv, d_k, d_v=None, dtype=jnp.bfloat16):
+        d_v = d_k if d_v is None else d_v
+        return KVCache(
+            k=jnp.zeros((n_layers, batch, max_seq, n_kv, d_k), dtype),
+            v=jnp.zeros((n_layers, batch, max_seq, n_kv, d_v), dtype),
+            pos=jnp.full((batch, max_seq), -1, jnp.int32),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+
+def ring_slots(cursor: jax.Array, n_new: int, size: int, n_pinned: int = 0) -> jax.Array:
+    """Slot indices for writing ``n_new`` entries at ``cursor`` into a cache
+    of ``size`` slots whose first ``n_pinned`` slots are never recycled
+    (always-visible meta tokens) and whose remaining ``size - n_pinned``
+    slots form a ring.
+
+    Entries that would be overwritten by a *later* entry in the same write
+    (ring wrap with n_new > ring) are redirected to slot ``size`` — combined
+    with ``mode="drop"`` scatters this yields last-writer-wins semantics.
+    For full-length caches the modulo is a no-op.
+    """
+    idx = cursor + jnp.arange(n_new, dtype=jnp.int32)
+    ring = max(size - n_pinned, 1)
+    slot = jnp.where(
+        idx < n_pinned, idx, n_pinned + jnp.mod(idx - n_pinned, ring))
+    keep = (idx < n_pinned) | (idx >= cursor + n_new - ring)
+    return jnp.where(keep, slot, size)
+
+
+def cache_write(cache_k, cache_v, k_new, v_new, cursor, n_pinned: int = 0):
+    """Scatter [B, T, KVH, D] new K/V into the cache at ``cursor``.
+
+    One code path for full caches (S == max_seq), sliding-window ring caches
+    (S == window + n_meta) and pinned meta-token slots.  Returns (k, v)."""
+    S = cache_k.shape[1]
+    slots = ring_slots(cursor, k_new.shape[1], S, n_pinned)
+    ck = cache_k.at[:, slots].set(k_new.astype(cache_k.dtype), mode="drop")
+    cv = cache_v.at[:, slots].set(v_new.astype(cache_v.dtype), mode="drop")
+    return ck, cv
+
+
+def cache_write_single(cache: jax.Array, new: jax.Array, cursor, n_pinned: int = 0):
+    """Scatter one [B, T, ...] array into a [B, S, ...] ring cache."""
+    slots = ring_slots(cursor, new.shape[1], cache.shape[1], n_pinned)
+    return cache.at[:, slots].set(new.astype(cache.dtype), mode="drop")
+
+
+def cache_pos_write(pos: jax.Array, new_pos: jax.Array, cursor, n_pinned: int = 0):
+    """Scatter new absolute positions [B, T] into the pos ring [B, S]."""
+    slots = ring_slots(cursor, new_pos.shape[1], pos.shape[1], n_pinned)
+    return pos.at[:, slots].set(new_pos.astype(pos.dtype), mode="drop")

@@ -1,0 +1,187 @@
+"""Shared model primitives: initializers, norms, rotary embeddings, MLPs.
+
+Everything is pure-functional: parameters are nested dicts of ``jnp``
+arrays, layers are functions ``(params, x, ...) -> y``.  Parameter
+*structure* builders return ShapeDtypeStruct-compatible initializer thunks
+so the dry-run can ``jax.eval_shape`` them without allocating.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers.  Each init fn maps (key) -> array; builders compose dicts.
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype):
+    """Truncated-normal fan-in init for 2D+ weights laid out [..., in, out].
+
+    Works for stacked per-layer weights [L, in, out] too: fan-in is always
+    the second-to-last axis.
+    """
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation, output in x.dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    normed = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for RoPE, shape [head_dim // 2], float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.
+
+    x: [..., seq, heads, head_dim]; positions: [..., seq] int32 (broadcastable
+    against x's batch/seq leading dims).
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)             # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                      # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_positions: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal positional embedding [n, dim]."""
+    half = dim // 2
+    log_timescale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    pos = jnp.arange(n_positions, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    """Gated SwiGLU MLP: params {w_gate [d,f], w_up [d,f], w_down [f,d]}."""
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
+    """Plain GELU MLP (Whisper): params {w_in [d,f], b_in, w_out [f,d], b_out}."""
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_in"].astype(x.dtype), approximate=True)
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+    return out + params["b_out"].astype(x.dtype)
+
+
+def swiglu_params(d_model: int, d_ff: int, dtype) -> dict:
+    """Shape/init spec for a SwiGLU MLP (see builders in model.py)."""
+    return {
+        "w_gate": ((d_model, d_ff), dense_init, dtype),
+        "w_up": ((d_model, d_ff), dense_init, dtype),
+        "w_down": ((d_ff, d_model), dense_init, dtype),
+    }
+
+
+def gelu_mlp_params(d_model: int, d_ff: int, dtype) -> dict:
+    return {
+        "w_in": ((d_model, d_ff), dense_init, dtype),
+        "b_in": ((d_ff,), zeros_init, dtype),
+        "w_out": ((d_ff, d_model), dense_init, dtype),
+        "b_out": ((d_model,), zeros_init, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Spec-dict -> params materialization (shared by all model builders)
+# ---------------------------------------------------------------------------
+
+
+def build_params(spec: dict, key: jax.Array):
+    """Materialize a nested spec dict {name: (shape, init, dtype) | subdict}.
+
+    Deterministic: the key is folded with a stable hash of each leaf path, so
+    adding parameters does not reshuffle the init of existing ones.
+    """
+    leaves = []
+
+    def _walk(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                _walk(node[k], path + (k,))
+        else:
+            leaves.append((path, node))
+
+    _walk(spec, ())
+
+    out = {}
+    for path, (shape, init, dtype) in leaves:
+        leaf_key = jax.random.fold_in(key, _stable_hash("/".join(path)))
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = init(leaf_key, shape, dtype)
+    return out
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 % (1 << 31)
+    return h
+
+
+def stack_specs(spec: dict, n: int) -> dict:
+    """Prepend a leading stack dimension of size n to every leaf of a spec."""
+    if isinstance(spec, dict):
+        return {k: stack_specs(v, n) for k, v in spec.items()}
+    shape, init, dtype = spec
+    return ((n,) + tuple(shape), init, dtype)

@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Train/prefill decompress the latent into per-head K/V and run the shared
+chunked flash attention.  Decode uses the *absorbed* formulation: the cache
+holds only the compressed latent ``c_kv`` [B, S, r_kv] plus the shared rotary
+key [B, S, d_rope] — this is the memory-roofline win MLA exists for (cache
+bytes/token: r_kv + d_rope instead of 2*H*d_head).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.attention import NEG_INF, chunked_attention, visibility_mask
+from repro.models.layers import apply_rope, dense_init, ones_init, rms_norm
+
+
+def mla_params_spec(d_model: int, n_heads: int, mla: MLAConfig, dtype) -> dict:
+    qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    return {
+        "w_dq": ((d_model, mla.q_lora_rank), dense_init, dtype),
+        "q_norm": ((mla.q_lora_rank,), ones_init, jnp.float32),
+        "w_uq": ((mla.q_lora_rank, n_heads * qk), dense_init, dtype),
+        "w_dkv": ((d_model, mla.kv_lora_rank), dense_init, dtype),
+        "kv_norm": ((mla.kv_lora_rank,), ones_init, jnp.float32),
+        "w_uk": ((mla.kv_lora_rank, n_heads * mla.qk_nope_head_dim), dense_init, dtype),
+        "w_uv": ((mla.kv_lora_rank, n_heads * mla.v_head_dim), dense_init, dtype),
+        "w_kr": ((d_model, mla.qk_rope_head_dim), dense_init, dtype),
+        "w_o": ((n_heads * mla.v_head_dim, d_model), dense_init, dtype),
+    }
+
+
+def _project_q(mla: MLAConfig, n_heads: int, params, x, positions, rope_theta):
+    """-> q_nope [B,T,H,dn], q_rope [B,T,H,dr] (rope applied)."""
+    b, t, _ = x.shape
+    qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    cq = jnp.einsum("btd,dr->btr", x, params["w_dq"].astype(x.dtype))
+    cq = rms_norm(cq, params["q_norm"])
+    q = jnp.einsum("btr,rh->bth", cq, params["w_uq"].astype(x.dtype))
+    q = q.reshape(b, t, n_heads, qk)
+    q_nope = q[..., : mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim :], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latents(mla: MLAConfig, params, x, positions, rope_theta):
+    """Compressed latent + shared rotary key (what the decode cache stores)."""
+    ckv = jnp.einsum("btd,dr->btr", x, params["w_dkv"].astype(x.dtype))
+    ckv = rms_norm(ckv, params["kv_norm"])
+    kr = jnp.einsum("btd,dr->btr", x, params["w_kr"].astype(x.dtype))
+    kr = apply_rope(kr[:, :, None, :], positions, rope_theta)[:, :, 0, :]
+    return ckv, kr
+
+
+def mla_attention_full(
+    mla: MLAConfig,
+    n_heads: int,
+    params: dict,
+    x: jax.Array,             # [B, T, d]
+    positions: jax.Array,     # [B, T]
+    rope_theta: float,
+    *,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Train/prefill path: decompress + flash attention.
+
+    Returns (attn_out [B,T,d], (c_kv, k_rope) latents for the cache).
+    """
+    b, t, _ = x.shape
+    h = n_heads
+    q_nope, q_rope = _project_q(mla, h, params, x, positions, rope_theta)
+    ckv, kr = mla_latents(mla, params, x, positions, rope_theta)
+
+    k_nope = jnp.einsum("btr,rh->bth", ckv, params["w_uk"].astype(x.dtype))
+    k_nope = k_nope.reshape(b, t, h, mla.qk_nope_head_dim)
+    v = jnp.einsum("btr,rh->bth", ckv, params["w_uv"].astype(x.dtype))
+    v = v.reshape(b, t, h, mla.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], q_rope.shape)], axis=-1)
+    out = chunked_attention(
+        q, k, v, positions, positions, causal=True, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )
+    out = jnp.einsum(
+        "btf,fd->btd", out.reshape(b, t, h * mla.v_head_dim), params["w_o"].astype(x.dtype)
+    )
+    return out, (ckv, kr)
+
+
+def mla_attention_decode(
+    mla: MLAConfig,
+    n_heads: int,
+    params: dict,
+    x: jax.Array,             # [B, Tq, d] (Tq small)
+    positions: jax.Array,     # [B, Tq]
+    ckv_cache: jax.Array,     # [B, S, r_kv]  (includes current tokens)
+    kr_cache: jax.Array,      # [B, S, d_rope]
+    kv_pos: jax.Array,        # [B, S]
+    rope_theta: float,
+) -> jax.Array:
+    """Absorbed decode: score and read directly in latent space."""
+    b, tq, _ = x.shape
+    h = n_heads
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    r = mla.kv_lora_rank
+    q_nope, q_rope = _project_q(mla, h, params, x, positions, rope_theta)
+
+    w_uk = params["w_uk"].astype(x.dtype).reshape(r, h, dn)
+    # absorb W_uk into the query:  q_abs[b,t,h,r] = sum_n q_nope[b,t,h,n] W_uk[r,h,n]
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (
+        jnp.einsum("bthr,bsr->bhts", q_abs, ckv_cache, preferred_element_type=jnp.float32)
+        + jnp.einsum("bthp,bsp->bhts", q_rope, kr_cache, preferred_element_type=jnp.float32)
+    ) * scale
+    vis = visibility_mask(positions, kv_pos, causal=True)
+    s = jnp.where(vis[:, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # no preferred_element_type: bf16xbf16->f32 batched dots are unimplemented
+    # in the XLA:CPU thunk runtime (TPU MXU accumulates in f32 regardless);
+    # p is normalized so bf16 output is safe.
+    o_latent = jnp.einsum(
+        "bhts,bsr->bthr", p.astype(ckv_cache.dtype), ckv_cache
+    ).astype(x.dtype)
+    w_uv = params["w_uv"].astype(x.dtype).reshape(r, h, mla.v_head_dim)
+    o = jnp.einsum("bthr,rhv->bthv", o_latent, w_uv)
+    return jnp.einsum(
+        "btf,fd->btd", o.reshape(b, tq, h * mla.v_head_dim), params["w_o"].astype(x.dtype)
+    )

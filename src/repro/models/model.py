@@ -1,0 +1,438 @@
+"""Unified model facade: one API over the 10 assigned architectures.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions:
+
+* ``init(key)``            — materialize parameters (master dtype).
+* ``loss(params, batch)``  — causal-LM loss (chunked CE, never materializes
+                             the full [B, T, V] logits).
+* ``prefill(params, batch, cache)``  — populate caches, return last logits.
+* ``decode_step(params, cache, tokens)`` — one serve step.
+* ``init_cache(batch, max_seq)`` — family-specific cache pytree.
+
+The dry-run only ever touches these through ``jax.eval_shape`` /
+``jit(...).lower`` — no device allocation at full size.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as tfm
+from repro.models import whisper as whisper_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import cache_pos_write
+from repro.models.layers import (
+    build_params,
+    dense_init,
+    embed_init,
+    ones_init,
+    rms_norm,
+    stack_specs,
+)
+
+Batch = Dict[str, jax.Array]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (the [B,T,V] logits are never materialized)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(
+    h: jax.Array,            # [B, T, d]
+    unembed: jax.Array,      # [d, V]
+    labels: jax.Array,       # [B, T] int32, -1 = ignore
+    *,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sum of token losses, token count), fp32."""
+    b, t, d = h.shape
+    chunk = min(chunk, t)
+    n = -(-t // chunk)
+    pad = n * chunk - t
+    if pad:
+        h = jnp.pad(h, [(0, 0), (0, pad), (0, 0)])
+        labels = jnp.pad(labels, [(0, 0), (0, pad)], constant_values=-1)
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        loss_sum, count = carry
+        hx, lx = inp
+        logits = jnp.einsum(
+            "btd,dv->btv", hx, unembed.astype(hx.dtype), preferred_element_type=jnp.float32
+        )
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lx >= 0).astype(jnp.float32)
+        return (loss_sum + ((lse - ll) * mask).sum(), count + mask.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc),
+        unroll=n if unroll else 1,
+    )
+    return loss_sum, count
+
+
+def _logits_last(h_last: jax.Array, unembed: jax.Array) -> jax.Array:
+    """h_last [B, T, d] -> logits [B, T, V] (small T only)."""
+    return jnp.einsum(
+        "btd,dv->btv", h_last, unembed.astype(h_last.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    # attention chunk sizes (tunable per shape by the launcher)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # unroll all layer scans: ONLY for the roofline costing compile (XLA
+    # cost_analysis counts while-loop bodies once; see launch/dryrun.py)
+    unroll: bool = False
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_spec(self) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        spec: dict = {
+            "embed": ((cfg.vocab, cfg.d_model), embed_init, dtype),
+            "norm_f": ((cfg.d_model,), ones_init, jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            spec["unembed"] = ((cfg.d_model, cfg.vocab), dense_init, dtype)
+        if cfg.n_meta_tokens:
+            spec["meta"] = ((cfg.n_meta_tokens, cfg.d_model), embed_init, dtype)
+
+        if cfg.family in ("dense", "moe", "hybrid"):
+            spec["blocks"] = stack_specs(tfm.block_params_spec(cfg, dtype), cfg.n_layers)
+        elif cfg.family == "vlm":
+            per = cfg.vision.cross_attn_every
+            n_groups = cfg.n_layers // per
+            n_self = n_groups * (per - 1)
+            spec["blocks"] = stack_specs(tfm.block_params_spec(cfg, dtype), n_self)
+            spec["cross"] = stack_specs(tfm.cross_block_params_spec(cfg, dtype), n_groups)
+            spec["vision_proj"] = ((cfg.vision.vision_dim, cfg.d_model), dense_init, dtype)
+        elif cfg.family == "ssm":
+            n_pairs = xlstm_mod.xlstm_pair_count(cfg.n_layers, cfg.xlstm)
+            spec["m_blocks"] = stack_specs(
+                xlstm_mod.mlstm_params_spec(cfg.d_model, cfg.n_heads, cfg.xlstm, dtype), n_pairs)
+            spec["s_blocks"] = stack_specs(
+                xlstm_mod.slstm_params_spec(cfg.d_model, cfg.n_heads, cfg.xlstm, dtype), n_pairs)
+        elif cfg.family == "audio":
+            spec["enc"] = {
+                "blocks": stack_specs(
+                    whisper_mod.enc_block_spec(cfg, dtype), cfg.audio.n_encoder_layers),
+                "ln_f": whisper_mod._ln_spec(cfg.d_model),
+            }
+            spec["dec"] = {
+                "blocks": stack_specs(whisper_mod.dec_block_spec(cfg, dtype), cfg.n_layers),
+                "ln_f": whisper_mod._ln_spec(cfg.d_model),
+            }
+        else:
+            raise ValueError(cfg.family)
+        return spec
+
+    def init(self, key: jax.Array):
+        return build_params(self.param_spec(), key)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: build_params(self.param_spec(), jax.random.PRNGKey(0)))
+
+    # -- embedding helpers ----------------------------------------------------
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        from repro.distributed.collectives import dp_tp_axes, usable_mesh
+
+        mesh = usable_mesh()
+        table = params["embed"]
+        if (mesh is not None
+                and table.shape[-1] % mesh.shape["model"] == 0
+                and tokens.shape[0] % _dp_size_of(mesh) == 0):
+            from repro.distributed.collectives import embed_lookup
+
+            x = embed_lookup(table, tokens, mesh)
+        else:
+            x = jnp.take(table, tokens, axis=0)
+        return x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def _unembed_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    def _positions(self, batch_size: int, start, length: int) -> jax.Array:
+        pos = start + jnp.arange(length, dtype=jnp.int32)[None, :]
+        return jnp.broadcast_to(pos, (batch_size, length))
+
+    # -- trunk dispatch -------------------------------------------------------
+
+    def _trunk(self, params, x, positions, *, mode, cache, batch=None):
+        """Run the layer stack.  Returns (h, new_layer_cache, aux)."""
+        cfg = self.cfg
+        kv_pos = cache["pos"] if (cache is not None and "pos" in cache) else None
+        cursor = cache["length"] if cache is not None else None
+        layers_cache = cache["layers"] if cache is not None else None
+        remat = mode == "train"
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "hybrid"):
+            h, new_layers, aux = tfm.stack_apply(
+                cfg, params["blocks"], x, positions, mode=mode, cache=layers_cache,
+                kv_pos=kv_pos, cursor=cursor, remat=remat,
+                q_chunk=self.q_chunk, kv_chunk=self.kv_chunk, unroll=self.unroll,
+            )
+        elif cfg.family == "vlm":
+            vision_states = None
+            if mode != "decode":
+                frontend = batch["frontend"].astype(x.dtype)
+                vision_states = jnp.einsum(
+                    "bpe,ed->bpd", frontend, params["vision_proj"].astype(x.dtype))
+            h, new_layers, aux = tfm.vlm_stack_apply(
+                cfg, {"blocks": params["blocks"], "cross": params["cross"]},
+                x, positions, mode=mode, vision_states=vision_states,
+                cache=layers_cache, kv_pos=kv_pos, cursor=cursor, remat=remat,
+                q_chunk=self.q_chunk, kv_chunk=self.kv_chunk, unroll=self.unroll,
+            )
+        elif cfg.family == "ssm":
+            state = layers_cache
+            if state is None:
+                n_pairs = xlstm_mod.xlstm_pair_count(cfg.n_layers, cfg.xlstm)
+                state = xlstm_mod.XLSTMStackState.init(
+                    n_pairs, x.shape[0], cfg.d_model, cfg.n_heads, cfg.xlstm,
+                    jnp.dtype(cfg.compute_dtype))
+            h, new_layers = xlstm_mod.xlstm_stack_apply(
+                cfg.xlstm, cfg.n_heads, params, x, state, remat=remat,
+                unroll=self.unroll)
+        elif cfg.family == "audio":
+            if mode == "decode":
+                enc_out = None
+            else:
+                enc_out = batch["frontend"].astype(x.dtype)
+                enc_out = whisper_mod.encoder_forward(
+                    cfg, params["enc"], enc_out, remat=remat, unroll=self.unroll)
+            h, new_layers = whisper_mod.decoder_forward(
+                cfg, params["dec"], x, positions, enc_out, mode=mode,
+                cache=layers_cache, kv_pos=kv_pos, cursor=cursor, remat=remat,
+                unroll=self.unroll)
+            return h, new_layers, aux
+        else:
+            raise ValueError(cfg.family)
+
+        if cfg.family != "audio":
+            h = rms_norm(h, params["norm_f"], cfg.norm_eps)
+        return h, new_layers, aux
+
+    # -- training -------------------------------------------------------------
+
+    def loss(self, params, batch: Batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        b, t = tokens.shape
+        x = self._embed(params, tokens)
+        nm = cfg.n_meta_tokens
+        if nm:
+            meta = jnp.broadcast_to(
+                params["meta"].astype(x.dtype)[None], (b, nm, cfg.d_model))
+            x = jnp.concatenate([meta, x], axis=1)
+        positions = self._positions(b, 0, t + nm)
+        h, _, aux = self._trunk(params, x, positions, mode="train", cache=None, batch=batch)
+        if nm:
+            h = h[:, nm:]
+        loss_sum, count = chunked_ce_loss(
+            h, self._unembed_matrix(params), labels, unroll=self.unroll)
+        loss = loss_sum / jnp.maximum(count, 1.0)
+        total = loss + aux / max(cfg.n_layers, 1)
+        return total, {"ce_loss": loss, "aux_loss": aux, "tokens": count}
+
+    # -- serving ----------------------------------------------------------------
+
+    def prefill(self, params, batch: Batch, cache: Cache) -> Tuple[Cache, jax.Array]:
+        """Populate caches from a [B, S] prompt; returns (cache, last-token logits)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = self._embed(params, tokens)
+        nm = cfg.n_meta_tokens
+        if nm:
+            meta = jnp.broadcast_to(
+                params["meta"].astype(x.dtype)[None], (b, nm, cfg.d_model))
+            x = jnp.concatenate([meta, x], axis=1)
+        positions = self._positions(b, 0, t + nm)
+        h, new_layers, _ = self._trunk(params, x, positions, mode="prefill",
+                                       cache=cache, batch=batch)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+        if "pos" in cache:
+            new_cache["pos"] = cache_pos_write(
+                cache["pos"], positions, cache["length"], n_pinned=nm)
+        new_cache["length"] = cache["length"] + t + nm
+        logits = _logits_last(h[:, -1:], self._unembed_matrix(params))
+        return new_cache, logits
+
+    def decode_step(self, params, cache: Cache, tokens: jax.Array) -> Tuple[Cache, jax.Array]:
+        """One decode step: tokens [B, T_small] -> (cache, logits [B, T_small, V])."""
+        cfg = self.cfg
+        b, t = tokens.shape
+        x = self._embed(params, tokens)
+        positions = self._positions(b, cache["length"], t)
+        new_cache = dict(cache)
+        if "pos" in cache:
+            # write positions first so self-attention sees the new token slots
+            new_cache["pos"] = cache_pos_write(
+                cache["pos"], positions, cache["length"], n_pinned=cfg.n_meta_tokens)
+            cache = dict(cache, pos=new_cache["pos"])
+        h, new_layers, _ = self._trunk(params, x, positions, mode="decode",
+                                       cache=cache, batch=None)
+        new_cache["layers"] = new_layers
+        new_cache["length"] = cache["length"] + t
+        logits = _logits_last(h, self._unembed_matrix(params))
+        return new_cache, logits
+
+    # -- caches -----------------------------------------------------------------
+
+    def cache_slots(self, max_seq: int) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return min(max_seq, cfg.sliding_window + cfg.n_meta_tokens)
+        return max_seq
+
+    def init_cache(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16) -> Cache:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        s = self.cache_slots(max_seq + cfg.n_meta_tokens)
+        cache: Cache = {"length": jnp.zeros((), jnp.int32)}
+        b = batch_size
+
+        if cfg.family in ("dense", "moe", "hybrid", "vlm"):
+            n_self = cfg.n_layers
+            layers: dict = {}
+            if cfg.mla is not None:
+                layers["ckv"] = jnp.zeros((n_self, b, s, cfg.mla.kv_lora_rank), dtype)
+                layers["kr"] = jnp.zeros((n_self, b, s, cfg.mla.qk_rope_head_dim), dtype)
+            else:
+                if cfg.family == "vlm":
+                    per = cfg.vision.cross_attn_every
+                    n_self = cfg.n_layers // per * (per - 1)
+                layers["k"] = jnp.zeros((n_self, b, s, cfg.n_kv_heads, hd), dtype)
+                layers["v"] = jnp.zeros((n_self, b, s, cfg.n_kv_heads, hd), dtype)
+            if cfg.family == "hybrid":
+                di = cfg.ssm.expand * cfg.d_model
+                layers["ssm_h"] = jnp.zeros((cfg.n_layers, b, di, cfg.ssm.d_state), jnp.float32)
+                layers["ssm_conv"] = jnp.zeros(
+                    (cfg.n_layers, b, cfg.ssm.d_conv - 1, di), dtype)
+            if cfg.family == "vlm":
+                n_groups = cfg.n_layers // cfg.vision.cross_attn_every
+                layers["xk"] = jnp.zeros(
+                    (n_groups, b, cfg.vision.n_patches, cfg.n_kv_heads, hd), dtype)
+                layers["xv"] = jnp.zeros(
+                    (n_groups, b, cfg.vision.n_patches, cfg.n_kv_heads, hd), dtype)
+            cache["layers"] = layers
+            cache["pos"] = jnp.full((b, s), -1, jnp.int32)
+        elif cfg.family == "ssm":
+            n_pairs = xlstm_mod.xlstm_pair_count(cfg.n_layers, cfg.xlstm)
+            cache["layers"] = xlstm_mod.XLSTMStackState.init(
+                n_pairs, b, cfg.d_model, cfg.n_heads, cfg.xlstm, dtype)
+        elif cfg.family == "audio":
+            layers = {
+                "k": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((cfg.n_layers, b, s, cfg.n_kv_heads, hd), dtype),
+                "xk": jnp.zeros((cfg.n_layers, b, cfg.audio.n_audio_ctx, cfg.n_kv_heads, hd), dtype),
+                "xv": jnp.zeros((cfg.n_layers, b, cfg.audio.n_audio_ctx, cfg.n_kv_heads, hd), dtype),
+            }
+            cache["layers"] = layers
+            cache["pos"] = jnp.full((b, s), -1, jnp.int32)
+        else:
+            raise ValueError(cfg.family)
+        return cache
+
+    def cache_shapes(self, batch_size: int, max_seq: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(partial(self.init_cache, batch_size, max_seq, dtype))
+
+    # -- input specs (dry-run stand-ins) ----------------------------------------
+
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b = shape.global_batch
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if shape.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+            specs["labels"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+        elif shape.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+        elif shape.kind == "decode":
+            specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision.n_patches, cfg.vision.vision_dim), jnp.bfloat16)
+        if cfg.family == "audio" and shape.kind != "decode":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.audio.n_audio_ctx, cfg.d_model), jnp.bfloat16)
+        return specs
+
+
+def _dp_size_of(mesh) -> int:
+    from repro.distributed.collectives import dp_tp_axes
+
+    dp, _ = dp_tp_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    return n
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+
+def count_params(cfg: ModelConfig) -> dict:
+    """Analytic counts from the parameter spec (exact — derived from shapes)."""
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda: build_params(model.param_spec(), jax.random.PRNGKey(0)))
+    leaves = jax.tree.leaves(shapes)
+    total = int(sum(np.prod(l.shape) for l in leaves))
+
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    active = total
+    if cfg.moe is not None:
+        per_expert = 3 * cfg.d_model * cfg.moe.d_expert
+        routed = cfg.moe.n_routed * per_expert * cfg.n_layers
+        active = total - routed + cfg.moe.top_k * per_expert * cfg.n_layers
+    # "active" for FLOPs excludes the input embedding gather (not a matmul)
+    active_flops = active - cfg.vocab * cfg.d_model
+    return {"total": total, "active": active, "active_flops": active_flops,
+            "embedding": embed}
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: ShapeSpec, backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (training) or 2*N*D (inference) with N = active
+    matmul params, D = tokens processed in the step."""
+    n = count_params(cfg)["active_flops"]
+    d = shape.tokens_per_step
+    return (6.0 if backward else 2.0) * n * d

@@ -1,0 +1,108 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeek-MoE / DBRX style).
+
+Routing path (baseline, pure pjit): top-k router -> flatten (token, slot)
+pairs -> sort by expert -> ``jax.lax.ragged_dot`` grouped matmuls -> weighted
+scatter-add back.  This never builds a [tokens, experts, capacity] one-hot
+dispatch tensor, so it scales to the 1M-token train_4k cells.  The Pallas
+``moe_gmm`` kernel is the TPU-target version of the grouped matmul; this is
+its reference.  The hillclimbed EP path (shard_map + all_to_all) lives in
+``repro.distributed.collectives``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_init, swiglu, swiglu_params
+
+
+def moe_params_spec(d_model: int, moe: MoEConfig, dtype) -> dict:
+    spec = {
+        "router": ((d_model, moe.n_routed), dense_init, jnp.float32),
+        "w_gate": ((moe.n_routed, d_model, moe.d_expert), dense_init, dtype),
+        "w_up": ((moe.n_routed, d_model, moe.d_expert), dense_init, dtype),
+        "w_down": ((moe.n_routed, moe.d_expert, d_model), dense_init, dtype),
+    }
+    if moe.n_shared:
+        d_sh = moe.d_shared or moe.d_expert * moe.n_shared
+        spec["shared"] = swiglu_params(d_model, d_sh, dtype)
+    return spec
+
+
+def route_topk(router_logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Softmax-then-topk routing (DeepSeek-MoE).
+
+    router_logits: [T, E] float32.
+    Returns (weights [T, k] — renormalized, experts [T, k] int32, probs [T, E]).
+    """
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, experts.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs: jax.Array, experts: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e.
+
+    f_e = fraction of routed (token, slot) pairs sent to e, p_e = mean router
+    probability of e.  Equals 1 at a perfectly uniform router.
+    """
+    t = probs.shape[0] * experts.shape[-1]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    f = counts / t
+    p = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def grouped_expert_ffn(
+    xs: jax.Array,            # [T*k, d] tokens sorted by expert
+    group_sizes: jax.Array,   # [E] int32
+    w_gate: jax.Array,        # [E, d, f]
+    w_up: jax.Array,
+    w_down: jax.Array,        # [E, f, d]
+) -> jax.Array:
+    """SwiGLU over expert groups via ragged_dot -> [T*k, d]."""
+    dt = xs.dtype
+    gate = jax.lax.ragged_dot(xs, w_gate.astype(dt), group_sizes)
+    up = jax.lax.ragged_dot(xs, w_up.astype(dt), group_sizes)
+    h = jax.nn.silu(gate) * up
+    return jax.lax.ragged_dot(h, w_down.astype(dt), group_sizes)
+
+
+def moe_ffn(moe: MoEConfig, params: dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN over x [..., d].  Returns (y [..., d], aux_loss scalar)."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    t = xf.shape[0]
+    k = moe.top_k
+    e = moe.n_routed
+
+    logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    weights, experts, probs = route_topk(logits, k)
+    aux = load_balance_loss(probs, experts, e) * moe.router_aux_coef
+
+    # flatten (token, slot) pairs and sort by destination expert
+    flat_exp = experts.reshape(-1)                      # [T*k]
+    order = jnp.argsort(flat_exp)                       # [T*k]
+    token_src = order // k                               # originating token
+    xs = jnp.take(xf, token_src, axis=0)                 # [T*k, d]
+    group_sizes = jnp.zeros((e,), jnp.int32).at[flat_exp].add(1)
+
+    ys = grouped_expert_ffn(
+        xs, group_sizes, params["w_gate"], params["w_up"], params["w_down"]
+    )
+
+    w_sorted = jnp.take(weights.reshape(-1), order)      # [T*k]
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[token_src].add(ys.astype(jnp.float32) * w_sorted[:, None])
+
+    if moe.n_shared:
+        y = y + swiglu(params["shared"], xf).astype(jnp.float32)
+
+    return y.reshape(*lead, d).astype(x.dtype), aux

@@ -1,0 +1,153 @@
+"""Mamba-style selective SSM branch (Hymba hybrid blocks).
+
+Training/prefill uses a memory-bounded *nested* scan: an outer
+``jax.checkpoint``-ed scan over time chunks carrying the [B, d_inner,
+d_state] state, an inner ``lax.scan`` over steps — the per-step
+[B, d_inner, d_state] decay tensor is never materialized for the whole
+sequence, so 4k-seq cells fit.  Decode is a single recurrence step with an
+explicit (h, conv window) state — O(1) per token, which is what makes the
+hymba long_500k cell runnable.  ``repro.kernels.ssm_scan`` is the TPU-target
+chunked kernel; this module is its reference.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_init, zeros_init
+
+
+def _a_log_init(key, shape, dtype):
+    # S4D-real init: A = -[1..d_state] per channel (works for stacked [L, ...])
+    d_state = shape[-1]
+    a = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), shape)
+    return jnp.log(a).astype(dtype)
+
+
+def _dt_bias_init(key, shape, dtype):
+    # bias so softplus(dt) starts in [1e-3, 1e-1] (mamba reference init)
+    u = jax.random.uniform(key, shape, jnp.float32)
+    dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inverse softplus
+
+
+def ssm_params_spec(d_model: int, ssm: SSMConfig, dtype) -> dict:
+    d_inner = ssm.expand * d_model
+    dt_rank = ssm.dt_rank or -(-d_model // 16)
+    return {
+        "w_in": ((d_model, 2 * d_inner), dense_init, dtype),
+        "conv_w": ((ssm.d_conv, d_inner), dense_init, dtype),
+        "conv_b": ((d_inner,), zeros_init, dtype),
+        "w_xproj": ((d_inner, dt_rank + 2 * ssm.d_state), dense_init, dtype),
+        "w_dt": ((dt_rank, d_inner), dense_init, dtype),
+        "dt_bias": ((d_inner,), _dt_bias_init, jnp.float32),
+        "a_log": ((d_inner, ssm.d_state), _a_log_init, jnp.float32),
+        "d_skip": ((d_inner,), lambda k, s, d: jnp.ones(s, d), jnp.float32),
+        "w_out": ((d_inner, d_model), dense_init, dtype),
+    }
+
+
+class SSMState(NamedTuple):
+    h: jax.Array       # [B, d_inner, d_state] float32
+    conv: jax.Array    # [B, d_conv - 1, d_inner] trailing conv window
+
+    @staticmethod
+    def init(batch: int, d_model: int, ssm: SSMConfig, dtype=jnp.float32):
+        d_inner = ssm.expand * d_model
+        return SSMState(
+            h=jnp.zeros((batch, d_inner, ssm.d_state), jnp.float32),
+            conv=jnp.zeros((batch, ssm.d_conv - 1, d_inner), dtype),
+        )
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, conv_b: jax.Array, prefix: jax.Array):
+    """Depthwise causal conv over time.  x [B,T,C]; prefix [B,W-1,C]."""
+    w = conv_w.shape[0]
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + xp[:, i : i + x.shape[1]] * conv_w[i].astype(x.dtype)
+    return out + conv_b.astype(x.dtype), xp[:, -(w - 1) :] if w > 1 else prefix
+
+
+def _dbc(ssm: SSMConfig, dt_rank: int, params, xc):
+    """delta [.., d_inner] f32, B [.., d_state] f32, C [.., d_state] f32."""
+    proj = jnp.einsum("...c,cr->...r", xc, params["w_xproj"].astype(xc.dtype))
+    dt = proj[..., :dt_rank]
+    b = proj[..., dt_rank : dt_rank + ssm.d_state].astype(jnp.float32)
+    c = proj[..., dt_rank + ssm.d_state :].astype(jnp.float32)
+    delta = jax.nn.softplus(
+        jnp.einsum("...r,rc->...c", dt, params["w_dt"].astype(xc.dtype)).astype(jnp.float32)
+        + params["dt_bias"]
+    )
+    return delta, b, c
+
+
+def ssm_forward(
+    ssm: SSMConfig,
+    params: dict,
+    x: jax.Array,                 # [B, T, d_model]
+    state: SSMState,
+    *,
+    chunk: int = 128,
+) -> Tuple[jax.Array, SSMState]:
+    """Full-sequence selective scan.  Returns (y [B,T,d_model], final state)."""
+    b_sz, t, d_model = x.shape
+    d_inner = ssm.expand * d_model
+    dt_rank = ssm.dt_rank or -(-d_model // 16)
+    a = -jnp.exp(params["a_log"])                    # [d_inner, d_state] f32
+
+    xz = jnp.einsum("btd,dc->btc", x, params["w_in"].astype(x.dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_tail = _causal_conv(xi, params["conv_w"], params["conv_b"], state.conv)
+    xc = jax.nn.silu(xc)
+    delta, bmat, cmat = _dbc(ssm, dt_rank, params, xc)   # [B,T,*]
+
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+
+    def pad_t(arr):
+        return jnp.pad(arr, [(0, 0), (0, pad)] + [(0, 0)] * (arr.ndim - 2)) if pad else arr
+
+    xs = jax.tree.map(
+        lambda v: pad_t(v).reshape(b_sz, n_chunks, chunk, *v.shape[2:]),
+        (delta, bmat, cmat, xc.astype(jnp.float32)),
+    )
+
+    def step(h, inp):
+        dl, bt, ct, xt = inp                       # [B,d_inner], [B,ds], [B,ds], [B,d_inner]
+        decay = jnp.exp(dl[:, :, None] * a)        # [B, d_inner, d_state]
+        h = decay * h + (dl * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bcs,bs->bc", h, ct)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        dl, bt, ct, xt = inp                       # [B, chunk, ...]
+        h, ys = jax.lax.scan(step, h, (
+            jnp.moveaxis(dl, 1, 0), jnp.moveaxis(bt, 1, 0),
+            jnp.moveaxis(ct, 1, 0), jnp.moveaxis(xt, 1, 0),
+        ))
+        return h, jnp.moveaxis(ys, 0, 1)           # [B, chunk, d_inner]
+
+    h_final, ys = jax.lax.scan(
+        chunk_body, state.h, jax.tree.map(lambda v: jnp.moveaxis(v, 1, 0), xs)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b_sz, n_chunks * chunk, d_inner)[:, :t]
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("btc,cd->btd", y, params["w_out"].astype(x.dtype))
+    return out, SSMState(h=h_final, conv=conv_tail)
+
+
+def ssm_decode_step(
+    ssm: SSMConfig, params: dict, x: jax.Array, state: SSMState
+) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrence.  x [B, 1, d_model] -> (y [B, 1, d_model], state)."""
+    out, new_state = ssm_forward(ssm, params, x, state, chunk=1)
+    return out, new_state

@@ -1,0 +1,435 @@
+"""Decoder stacks: dense / MoE / Hymba(hybrid) / VLM assembly.
+
+All stacks scan over layers with stacked [L, ...] parameters — this keeps
+the HLO size O(1) in depth (one partitioned layer body), which is what makes
+40-layer × 512-device dry-run compiles tractable, and it is also the layout
+the FSDP all-gather wants.  Train mode wraps the layer body in
+``jax.checkpoint`` (layer-boundary remat).
+
+Modes
+-----
+``train``   — full sequence, no cache, returns hidden states.
+``prefill`` — full sequence, writes KV/state caches, returns hidden states.
+``decode``  — T new tokens (usually 1) against caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    cache_pos_write,
+    cache_write,
+    cache_write_single,
+    chunked_attention,
+    decode_attention,
+)
+from repro.models.layers import (
+    apply_rope,
+    build_params,
+    dense_init,
+    embed_init,
+    ones_init,
+    rms_norm,
+    swiglu,
+    swiglu_params,
+)
+
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sub-layer
+# ---------------------------------------------------------------------------
+
+
+def gqa_params_spec(cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "w_q": ((cfg.d_model, cfg.n_heads * hd), dense_init, dtype),
+        "w_k": ((cfg.d_model, cfg.n_kv_heads * hd), dense_init, dtype),
+        "w_v": ((cfg.d_model, cfg.n_kv_heads * hd), dense_init, dtype),
+        "w_o": ((cfg.n_heads * hd, cfg.d_model), dense_init, dtype),
+    }
+
+
+def gqa_project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array):
+    from repro.distributed.collectives import constrain_heads
+
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["w_q"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+    k = jnp.einsum("btd,dh->bth", x, p["w_k"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", x, p["w_v"].astype(x.dtype)).reshape(b, t, cfg.n_kv_heads, hd)
+    # explicit constraints: without them GSPMD replicates the score tensors
+    # when H doesn't divide the model axis (see collectives.constrain_heads)
+    q = constrain_heads(apply_rope(q, positions, cfg.rope_theta))
+    k = constrain_heads(apply_rope(k, positions, cfg.rope_theta))
+    v = constrain_heads(v)
+    return q, k, v
+
+
+def gqa_attention(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str,
+    layer_cache: Optional[dict] = None,
+    kv_pos: Optional[jax.Array] = None,
+    cursor: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention sub-layer (pre-norm residual applied by caller).
+
+    Returns (out [B,T,d], new_layer_cache {k, v} or None).
+    """
+    b, t, _ = x.shape
+    q, k, v = gqa_project_qkv(cfg, p, x, positions)
+
+    new_cache = None
+    if mode == "train":
+        out = chunked_attention(
+            q, k, v, positions, positions,
+            causal=True, window=cfg.sliding_window, n_meta=cfg.n_meta_tokens,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+    elif mode == "prefill":
+        out = chunked_attention(
+            q, k, v, positions, positions,
+            causal=True, window=cfg.sliding_window, n_meta=cfg.n_meta_tokens,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        ck, cv = cache_write(layer_cache["k"], layer_cache["v"], k, v, cursor,
+                             n_pinned=cfg.n_meta_tokens)
+        new_cache = {"k": ck, "v": cv}
+    elif mode == "decode":
+        mesh = None
+        if cfg.decode_kv_shard and not cfg.sliding_window:
+            from repro.distributed.collectives import usable_mesh
+
+            mesh = usable_mesh()
+            if mesh is not None and layer_cache["k"].shape[1] % mesh.shape["model"]:
+                mesh = None
+        if mesh is not None:
+            from repro.distributed.collectives import sharded_kv_decode_attention
+
+            out, ck, cv, _ = sharded_kv_decode_attention(
+                q, layer_cache["k"], layer_cache["v"], k, v,
+                positions, kv_pos, cursor, mesh)
+        else:
+            ck, cv = cache_write(layer_cache["k"], layer_cache["v"], k, v, cursor,
+                                 n_pinned=cfg.n_meta_tokens)
+            out = decode_attention(
+                q, ck, cv, positions, kv_pos,
+                window=cfg.sliding_window, n_meta=cfg.n_meta_tokens,
+            )
+        new_cache = {"k": ck, "v": cv}
+    else:
+        raise ValueError(mode)
+
+    hd = cfg.resolved_head_dim
+    out = jnp.einsum(
+        "btf,fd->btd", out.reshape(b, t, cfg.n_heads * hd), p["w_o"].astype(x.dtype)
+    )
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Layer blocks
+# ---------------------------------------------------------------------------
+
+
+def block_params_spec(cfg: ModelConfig, dtype) -> dict:
+    """Parameter spec for one decoder layer of the cfg's family."""
+    spec: dict = {"norm_attn": ((cfg.d_model,), ones_init, jnp.float32),
+                  "norm_ffn": ((cfg.d_model,), ones_init, jnp.float32)}
+    if cfg.mla is not None:
+        spec["attn"] = mla_mod.mla_params_spec(cfg.d_model, cfg.n_heads, cfg.mla, dtype)
+    else:
+        spec["attn"] = gqa_params_spec(cfg, dtype)
+    if cfg.moe is not None:
+        spec["ffn"] = moe_mod.moe_params_spec(cfg.d_model, cfg.moe, dtype)
+    elif cfg.d_ff > 0:
+        spec["ffn"] = swiglu_params(cfg.d_model, cfg.d_ff, dtype)
+    if cfg.family == "hybrid" and cfg.ssm is not None:
+        spec["ssm"] = ssm_mod.ssm_params_spec(cfg.d_model, cfg.ssm, dtype)
+        spec["norm_attn_out"] = ((cfg.d_model,), ones_init, jnp.float32)
+        spec["norm_ssm_out"] = ((cfg.d_model,), ones_init, jnp.float32)
+    return spec
+
+
+def _moe_dispatch(cfg: ModelConfig, ffn_params: dict, h: jax.Array):
+    """Pick the MoE implementation for the ambient mesh.
+
+    Under a multi-device mesh with a 'model' axis, use the explicit
+    expert-parallel shard_map path (GSPMD cannot partition the reference
+    sort+ragged_dot dispatch and falls back to full replication — measured
+    366 GiB/device on dbrx-132b).  Single-device (tests, smoke configs):
+    the pure-pjit reference."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is not None and not mesh.empty and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1 and cfg.moe.n_routed % mesh.shape["model"] == 0:
+        from repro.distributed.moe_ep import moe_ffn_ep
+
+        return moe_ffn_ep(cfg.moe, ffn_params, h, mesh)
+    return moe_mod.moe_ffn(cfg.moe, ffn_params, h)
+
+
+def decoder_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str,
+    layer_cache: Optional[dict] = None,
+    kv_pos: Optional[jax.Array] = None,
+    cursor: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """One decoder layer.  Returns (x, new_layer_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    new_cache: dict = {}
+
+    # ---- sequence mixing ----
+    if cfg.mla is not None:
+        if mode == "decode":
+            ckv_new, kr_new = mla_mod.mla_latents(cfg.mla, p["attn"], h, positions, cfg.rope_theta)
+            ckv = cache_write_single(layer_cache["ckv"], ckv_new, cursor)
+            kr = cache_write_single(layer_cache["kr"], kr_new, cursor)
+            attn_out = mla_mod.mla_attention_decode(
+                cfg.mla, cfg.n_heads, p["attn"], h, positions, ckv, kr, kv_pos, cfg.rope_theta
+            )
+            new_cache = {"ckv": ckv, "kr": kr}
+        else:
+            attn_out, (ckv_new, kr_new) = mla_mod.mla_attention_full(
+                cfg.mla, cfg.n_heads, p["attn"], h, positions, cfg.rope_theta,
+                q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+            if mode == "prefill":
+                new_cache = {
+                    "ckv": cache_write_single(layer_cache["ckv"], ckv_new, cursor),
+                    "kr": cache_write_single(layer_cache["kr"], kr_new, cursor),
+                }
+    else:
+        attn_out, kv_cache = gqa_attention(
+            cfg, p["attn"], h, positions, mode=mode,
+            layer_cache=layer_cache, kv_pos=kv_pos, cursor=cursor,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        if kv_cache is not None:
+            new_cache.update(kv_cache)
+
+    if cfg.family == "hybrid" and cfg.ssm is not None:
+        # Hymba: parallel attention + mamba heads on the same normed input,
+        # outputs normalized then averaged.
+        if layer_cache is None or "ssm_h" not in (layer_cache or {}):
+            st = ssm_mod.SSMState.init(x.shape[0], cfg.d_model, cfg.ssm)
+        else:
+            st = ssm_mod.SSMState(h=layer_cache["ssm_h"], conv=layer_cache["ssm_conv"])
+        ssm_out, st_new = ssm_mod.ssm_forward(cfg.ssm, p["ssm"], h, st)
+        mix = 0.5 * (
+            rms_norm(attn_out, p["norm_attn_out"], cfg.norm_eps)
+            + rms_norm(ssm_out, p["norm_ssm_out"], cfg.norm_eps)
+        )
+        x = x + mix
+        new_cache.update({"ssm_h": st_new.h, "ssm_conv": st_new.conv})
+    else:
+        x = x + attn_out
+
+    # ---- channel mixing ----
+    if cfg.moe is not None:
+        h2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        ffn_out, aux = _moe_dispatch(cfg, p["ffn"], h2)
+        x = x + ffn_out
+    elif cfg.d_ff > 0:
+        h2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        x = x + swiglu(p["ffn"], h2)
+
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention block (VLM)
+# ---------------------------------------------------------------------------
+
+
+def cross_block_params_spec(cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "norm_attn": ((cfg.d_model,), ones_init, jnp.float32),
+        "norm_ffn": ((cfg.d_model,), ones_init, jnp.float32),
+        "w_q": ((cfg.d_model, cfg.n_heads * hd), dense_init, dtype),
+        "w_k": ((cfg.d_model, cfg.n_kv_heads * hd), dense_init, dtype),
+        "w_v": ((cfg.d_model, cfg.n_kv_heads * hd), dense_init, dtype),
+        "w_o": ((cfg.n_heads * hd, cfg.d_model), dense_init, dtype),
+        "gate_attn": ((1,), lambda k, s, d: jnp.zeros(s, d), jnp.float32),
+        "gate_ffn": ((1,), lambda k, s, d: jnp.zeros(s, d), jnp.float32),
+        "ffn": swiglu_params(cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def cross_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    *,
+    memory: Optional[jax.Array] = None,       # [B, P, d] vision states (prefill/train)
+    mem_kv: Optional[Tuple[jax.Array, jax.Array]] = None,  # cached cross K/V (decode)
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Gated cross-attention block (Llama-3.2-Vision style)."""
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    q = jnp.einsum("btd,dh->bth", h, p["w_q"].astype(x.dtype)).reshape(b, t, cfg.n_heads, hd)
+    if mem_kv is None:
+        pm = memory.shape[1]
+        k = jnp.einsum("bpd,dh->bph", memory, p["w_k"].astype(x.dtype)).reshape(
+            b, pm, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bpd,dh->bph", memory, p["w_v"].astype(x.dtype)).reshape(
+            b, pm, cfg.n_kv_heads, hd)
+    else:
+        k, v = mem_kv
+    q_pos = jnp.zeros((b, t), jnp.int32)
+    kv_pos = jnp.zeros((b, k.shape[1]), jnp.int32)
+    out = chunked_attention(
+        q, k, v, q_pos, kv_pos, causal=False, q_chunk=q_chunk, kv_chunk=4096
+    )
+    out = jnp.einsum("btf,fd->btd", out.reshape(b, t, cfg.n_heads * hd), p["w_o"].astype(x.dtype))
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+    h2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_ffn"]).astype(x.dtype) * swiglu(p["ffn"], h2)
+    return x, (k, v)
+
+# ---------------------------------------------------------------------------
+# Stack drivers: scan over stacked [L, ...] layer params (+ cache slices)
+# ---------------------------------------------------------------------------
+
+
+def stack_apply(
+    cfg: ModelConfig,
+    blocks_params: dict,          # stacked [L, ...]
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str,
+    cache: Optional[dict] = None,  # stacked [L, ...] per-layer cache
+    kv_pos: Optional[jax.Array] = None,
+    cursor: Optional[jax.Array] = None,
+    remat: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Homogeneous decoder stack.  Returns (h, new_cache, aux_loss_sum).
+
+    ``unroll=True`` inlines every layer into the HLO — used ONLY by the
+    roofline costing compile (XLA cost_analysis counts a while-loop body
+    once, so the production scan would undercount FLOPs by ~n_layers x).
+    """
+
+    def body(carry, xs):
+        h, aux = carry
+        p_l, cache_l = xs
+        h, new_cache_l, aux_l = decoder_block(
+            cfg, p_l, h, positions, mode=mode, layer_cache=cache_l,
+            kv_pos=kv_pos, cursor=cursor, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+        return (h, aux + aux_l), new_cache_l
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (blocks_params, cache),
+        unroll=cfg.n_layers if unroll else 1,
+    )
+    return x, new_cache, aux
+
+
+def vlm_stack_apply(
+    cfg: ModelConfig,
+    params: dict,                 # {"blocks": [Ls,...], "cross": [Lx,...]}
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    mode: str,
+    vision_states: Optional[jax.Array] = None,   # [B, P, d] projected (prefill/train)
+    cache: Optional[dict] = None,
+    kv_pos: Optional[jax.Array] = None,
+    cursor: Optional[jax.Array] = None,
+    remat: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Interleaved stack: groups of ``cross_attn_every - 1`` self layers
+    followed by one gated cross-attention layer (Llama-3.2-Vision)."""
+    per = cfg.vision.cross_attn_every - 1
+    n_groups = cfg.n_layers // cfg.vision.cross_attn_every
+    reshape_group = lambda t: t.reshape(n_groups, per, *t.shape[1:])
+    blocks_g = jax.tree.map(reshape_group, params["blocks"])
+    self_cache_g = None
+    cross_cache = None
+    if cache is not None:
+        self_cache_g = jax.tree.map(
+            reshape_group, {"k": cache["k"], "v": cache["v"]}
+        ) if mode != "train" else None
+        cross_cache = {"xk": cache["xk"], "xv": cache["xv"]} if mode != "train" else None
+
+    def group_body(carry, xs):
+        h, aux = carry
+        p_self, p_cross, cache_self, cache_cross = xs
+
+        def self_body(c2, xs2):
+            h2, a2 = c2
+            p_l, cache_l = xs2
+            h2, new_cache_l, a_l = decoder_block(
+                cfg, p_l, h2, positions, mode=mode, layer_cache=cache_l,
+                kv_pos=kv_pos, cursor=cursor, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            )
+            return (h2, a2 + a_l), new_cache_l
+
+        (h, aux), new_self = jax.lax.scan(
+            self_body, (h, aux), (p_self, cache_self), unroll=per if unroll else 1)
+        if mode == "decode":
+            h, xkv = cross_block(
+                cfg, p_cross, h,
+                mem_kv=(cache_cross["xk"], cache_cross["xv"]), q_chunk=q_chunk,
+            )
+        else:
+            h, xkv = cross_block(cfg, p_cross, h, memory=vision_states, q_chunk=q_chunk)
+        new_cross = {"xk": xkv[0], "xv": xkv[1]}
+        return (h, aux), (new_self, new_cross)
+
+    if remat and mode == "train":
+        group_body = jax.checkpoint(group_body)
+    (x, aux), (new_self, new_cross) = jax.lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)),
+        (blocks_g, params["cross"], self_cache_g, cross_cache),
+        unroll=n_groups if unroll else 1,
+    )
+    new_cache = None
+    if mode != "train":
+        unshape = lambda t: t.reshape(n_groups * per, *t.shape[2:])
+        new_cache = {
+            "k": unshape(new_self["k"]),
+            "v": unshape(new_self["v"]),
+            "xk": new_cross["xk"],
+            "xv": new_cross["xv"],
+        }
+        if mode == "decode":
+            # cross K/V are read-only at decode; keep the cached ones
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    return x, new_cache, aux

@@ -1,0 +1,177 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+pre-computed frame embeddings [B, n_audio_ctx, d_model]; the encoder adds
+sinusoidal positions and runs bidirectional self-attention.  The decoder is
+causal self-attention + cross-attention to the encoder output, LayerNorm +
+GELU MLP throughout (Whisper uses pre-LN transformers with biases on q/v/out
+projections).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    cache_write,
+    chunked_attention,
+    decode_attention,
+)
+from repro.models.layers import (
+    dense_init,
+    gelu_mlp,
+    gelu_mlp_params,
+    layer_norm,
+    ones_init,
+    sinusoidal_positions,
+    zeros_init,
+)
+
+
+def _attn_spec(cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    return {
+        "w_q": ((d, cfg.n_heads * hd), dense_init, dtype),
+        "b_q": ((cfg.n_heads * hd,), zeros_init, dtype),
+        "w_k": ((d, cfg.n_kv_heads * hd), dense_init, dtype),
+        "w_v": ((d, cfg.n_kv_heads * hd), dense_init, dtype),
+        "b_v": ((cfg.n_kv_heads * hd,), zeros_init, dtype),
+        "w_o": ((cfg.n_heads * hd, d), dense_init, dtype),
+        "b_o": ((d,), zeros_init, dtype),
+    }
+
+
+def _ln_spec(d: int) -> dict:
+    return {"scale": ((d,), ones_init, jnp.float32), "bias": ((d,), zeros_init, jnp.float32)}
+
+
+def enc_block_spec(cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ln_attn": _ln_spec(cfg.d_model),
+        "attn": _attn_spec(cfg, dtype),
+        "ln_mlp": _ln_spec(cfg.d_model),
+        "mlp": gelu_mlp_params(cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dec_block_spec(cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ln_self": _ln_spec(cfg.d_model),
+        "self": _attn_spec(cfg, dtype),
+        "ln_cross": _ln_spec(cfg.d_model),
+        "cross": _attn_spec(cfg, dtype),
+        "ln_mlp": _ln_spec(cfg.d_model),
+        "mlp": gelu_mlp_params(cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _project(cfg: ModelConfig, p: dict, xq: jax.Array, xkv: jax.Array):
+    hd = cfg.resolved_head_dim
+    bq, tq = xq.shape[:2]
+    bk, tk = xkv.shape[:2]
+    q = (jnp.einsum("btd,dh->bth", xq, p["w_q"].astype(xq.dtype)) + p["b_q"].astype(xq.dtype))
+    k = jnp.einsum("btd,dh->bth", xkv, p["w_k"].astype(xq.dtype))
+    v = (jnp.einsum("btd,dh->bth", xkv, p["w_v"].astype(xq.dtype)) + p["b_v"].astype(xq.dtype))
+    return (
+        q.reshape(bq, tq, cfg.n_heads, hd),
+        k.reshape(bk, tk, cfg.n_kv_heads, hd),
+        v.reshape(bk, tk, cfg.n_kv_heads, hd),
+    )
+
+
+def _out(cfg: ModelConfig, p: dict, o: jax.Array) -> jax.Array:
+    b, t = o.shape[:2]
+    flat = o.reshape(b, t, cfg.n_heads * cfg.resolved_head_dim)
+    return jnp.einsum("btf,fd->btd", flat, p["w_o"].astype(o.dtype)) + p["b_o"].astype(o.dtype)
+
+
+def encoder_forward(cfg: ModelConfig, enc_params: dict, frames: jax.Array,
+                    *, remat: bool = True, unroll: bool = False) -> jax.Array:
+    """frames: [B, n_audio_ctx, d_model] stub embeddings -> encoder states."""
+    b, t, d = frames.shape
+    x = frames + sinusoidal_positions(t, d).astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(h, p_l):
+        a = layer_norm(h, p_l["ln_attn"]["scale"], p_l["ln_attn"]["bias"], cfg.norm_eps)
+        q, k, v = _project(cfg, p_l["attn"], a, a)
+        o = chunked_attention(q, k, v, pos, pos, causal=False, q_chunk=512, kv_chunk=512)
+        h = h + _out(cfg, p_l["attn"], o)
+        m = layer_norm(h, p_l["ln_mlp"]["scale"], p_l["ln_mlp"]["bias"], cfg.norm_eps)
+        return h + gelu_mlp(p_l["mlp"], m), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc_params["blocks"],
+                        unroll=cfg.audio.n_encoder_layers if unroll else 1)
+    return layer_norm(x, enc_params["ln_f"]["scale"], enc_params["ln_f"]["bias"], cfg.norm_eps)
+
+
+def decoder_forward(
+    cfg: ModelConfig,
+    dec_params: dict,             # {"blocks": [L,...], "ln_f": ...}
+    x: jax.Array,                 # [B, T, d] token embeddings (+positions)
+    positions: jax.Array,         # [B, T]
+    enc_out: Optional[jax.Array],  # [B, Te, d] (train/prefill)
+    *,
+    mode: str,
+    cache: Optional[dict] = None,  # {"k","v" [L,B,S,KV,hd], "xk","xv" [L,B,Te,KV,hd]}
+    kv_pos: Optional[jax.Array] = None,
+    cursor=None,
+    remat: bool = True,
+    unroll: bool = False,
+) -> Tuple[jax.Array, Optional[dict]]:
+    b = x.shape[0]
+
+    def body(h, xs):
+        p_l, cache_l = xs
+        new_cache_l = {}
+        s = layer_norm(h, p_l["ln_self"]["scale"], p_l["ln_self"]["bias"], cfg.norm_eps)
+        q, k, v = _project(cfg, p_l["self"], s, s)
+        if mode == "decode":
+            ck, cv = cache_write(cache_l["k"], cache_l["v"], k, v, cursor)
+            o = decode_attention(q, ck, cv, positions, kv_pos)
+            new_cache_l.update({"k": ck, "v": cv})
+        else:
+            o = chunked_attention(q, k, v, positions, positions, causal=True,
+                                  q_chunk=512, kv_chunk=512)
+            if mode == "prefill":
+                ck, cv = cache_write(cache_l["k"], cache_l["v"], k, v, cursor)
+                new_cache_l.update({"k": ck, "v": cv})
+        h = h + _out(cfg, p_l["self"], o)
+
+        c = layer_norm(h, p_l["ln_cross"]["scale"], p_l["ln_cross"]["bias"], cfg.norm_eps)
+        if mode == "decode":
+            xk, xv = cache_l["xk"], cache_l["xv"]
+            qc = _project(cfg, p_l["cross"], c, c)[0]
+            te = xk.shape[1]
+            o = decode_attention(
+                qc, xk, xv, jnp.zeros((b, qc.shape[1]), jnp.int32),
+                jnp.zeros((b, te), jnp.int32),
+            )
+            new_cache_l.update({"xk": xk, "xv": xv})
+        else:
+            qc, xk, xv = _project(cfg, p_l["cross"], c, enc_out)
+            te = xk.shape[1]
+            o = chunked_attention(
+                qc, xk, xv, jnp.zeros((b, qc.shape[1]), jnp.int32),
+                jnp.zeros((b, te), jnp.int32), causal=False, q_chunk=512, kv_chunk=512,
+            )
+            if mode == "prefill":
+                new_cache_l.update({"xk": xk, "xv": xv})
+        h = h + _out(cfg, p_l["cross"], o)
+
+        m = layer_norm(h, p_l["ln_mlp"]["scale"], p_l["ln_mlp"]["bias"], cfg.norm_eps)
+        h = h + gelu_mlp(p_l["mlp"], m)
+        return h, (new_cache_l or None)
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    x, new_cache = jax.lax.scan(body, x, (dec_params["blocks"], cache),
+                                unroll=cfg.n_layers if unroll else 1)
+    x = layer_norm(x, dec_params["ln_f"]["scale"], dec_params["ln_f"]["bias"], cfg.norm_eps)
+    return x, new_cache

@@ -1,0 +1,377 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation (see DESIGN.md):
+
+* **mLSTM** trains in *chunked parallel* form — within a chunk the output is
+  a decay-weighted attention-like matmul (MXU-friendly, [L, L] per chunk
+  only), across chunks a [dh, dh] matrix state is carried.  This is exactly
+  the schedule the Pallas ``mlstm_scan`` kernel implements; this module is
+  its reference.  Exponential gating is max-stabilized (m-state) as in the
+  xLSTM paper, eq. (15)-(19).
+* **sLSTM** has a true sequential dependence (gates read h_{t-1}), so there
+  is no parallel form; we run a nested checkpointed ``lax.scan``.  This is a
+  property of the architecture, not the port (the paper's own CUDA kernel is
+  sequential too).
+
+Decode for both is a cheap O(1) recurrence — xlstm long_500k cells run as
+state updates with no KV cache at all.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers import dense_init, ones_init, rms_norm, zeros_init
+
+
+def _fgate_bias_init(key, shape, dtype):
+    # positive forget-gate bias (linspace 3..6 per head), xLSTM reference init
+    return jnp.broadcast_to(jnp.linspace(3.0, 6.0, shape[-1]), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params_spec(d_model: int, n_heads: int, xl: XLSTMConfig, dtype) -> dict:
+    di = int(xl.proj_factor_mlstm * d_model)
+    return {
+        "norm": ((d_model,), ones_init, jnp.float32),
+        "w_up": ((d_model, 2 * di), dense_init, dtype),
+        "conv_w": ((xl.conv_width, di), dense_init, dtype),
+        "conv_b": ((di,), zeros_init, dtype),
+        "w_q": ((di, di), dense_init, dtype),
+        "w_k": ((di, di), dense_init, dtype),
+        "w_v": ((di, di), dense_init, dtype),
+        "w_i": ((di, n_heads), dense_init, jnp.float32),
+        "b_i": ((n_heads,), zeros_init, jnp.float32),
+        "w_f": ((di, n_heads), dense_init, jnp.float32),
+        "b_f": ((n_heads,), _fgate_bias_init, jnp.float32),
+        "gn": ((di,), ones_init, jnp.float32),
+        "w_down": ((di, d_model), dense_init, dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array      # [B, H, dh, dh] f32 matrix memory
+    n: jax.Array      # [B, H, dh] f32 normalizer
+    m: jax.Array      # [B, H] f32 max-stabilizer
+    conv: jax.Array   # [B, W-1, di] conv window
+
+    @staticmethod
+    def init(batch, d_model, n_heads, xl: XLSTMConfig, dtype=jnp.float32):
+        di = int(xl.proj_factor_mlstm * d_model)
+        dh = di // n_heads
+        return MLSTMState(
+            c=jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            n=jnp.zeros((batch, n_heads, dh), jnp.float32),
+            m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+            conv=jnp.zeros((batch, xl.conv_width - 1, di), dtype),
+        )
+
+
+def _conv1d(x, conv_w, conv_b, prefix):
+    w = conv_w.shape[0]
+    xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + xp[:, i : i + x.shape[1]] * conv_w[i].astype(x.dtype)
+    return out + conv_b.astype(x.dtype), xp[:, -(w - 1) :]
+
+
+def _mlstm_chunk(q, k, v, lf, li, state: Tuple[jax.Array, jax.Array, jax.Array]):
+    """One chunk of the stabilized chunked-parallel mLSTM.
+
+    q,k,v: [B, H, L, dh] (k pre-scaled by 1/sqrt(dh)); lf, li: [B, H, L]
+    log-forget (logsigmoid) and input-gate preactivations.
+    Returns (h [B,H,L,dh], new (c, n, m)).
+    """
+    c0, n0, m0 = state
+    b = jnp.cumsum(lf, axis=-1)                       # [B,H,L] inclusive log decay
+    # g_i = max(m0, cummax_{t<=i}(li_t - b_t)); m_i = b_i + g_i
+    g = jnp.maximum(m0[..., None], jax.lax.cummax(li - b, axis=2))
+    m_i = b + g
+    # intra-chunk weights: D[i,t] = exp(li_t - b_t - g_i) for t <= i
+    lt = (li - b)[..., None, :] - g[..., :, None]     # [B,H,L(i),L(t)]
+    tri = jnp.tril(jnp.ones((q.shape[2], q.shape[2]), bool))
+    d_w = jnp.where(tri, jnp.exp(lt), 0.0)
+    scores = jnp.einsum("bhid,bhtd->bhit", q, k, preferred_element_type=jnp.float32)
+    w_it = scores * d_w
+    inter_scale = jnp.exp(m0[..., None] - g)          # [B,H,L]
+    h_num = (
+        jnp.einsum("bhit,bhtd->bhid", w_it, v.astype(jnp.float32))
+        + jnp.einsum("bhie,bhde->bhid", q.astype(jnp.float32), c0) * inter_scale[..., None]
+    )
+    # normalizer uses the decay weights only (n_t = f n + i k has no q.k
+    # scores in it; they enter once via the q.n contraction below)
+    n_i = (
+        jnp.einsum("bhit,bhtd->bhid", d_w, k.astype(jnp.float32))
+        + n0[:, :, None, :] * inter_scale[..., None]
+    )
+    qn = jnp.einsum("bhid,bhid->bhi", q.astype(jnp.float32), n_i)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))
+    h = h_num / denom[..., None]
+    # carry to next chunk.  The stored state is stabilized by m:
+    #   C_L = e^{-m_L} (e^{b_L} Ĉ_0 + Σ_t e^{b_L - b_t + ĩ_t} v_t k_t^T),
+    # and m_L = b_L + g_L, so both weights lose the e^{b_L} factor.
+    g_l = g[..., -1]
+    m_new = m_i[..., -1]
+    wc = jnp.exp(li - b - g_l[..., None])             # [B,H,L]
+    c_new = c0 * jnp.exp(m0 - g_l)[..., None, None] + jnp.einsum(
+        "bhtd,bhte,bht->bhde", v.astype(jnp.float32), k.astype(jnp.float32), wc
+    )
+    n_new = n0 * jnp.exp(m0 - g_l)[..., None] + jnp.einsum(
+        "bhtd,bht->bhd", k.astype(jnp.float32), wc
+    )
+    return h, (c_new, n_new, m_new)
+
+
+def mlstm_forward(
+    xl: XLSTMConfig,
+    n_heads: int,
+    params: dict,
+    x: jax.Array,               # [B, T, d_model]
+    state: MLSTMState,
+    *,
+    chunk: int = 256,
+    unroll: bool = False,
+) -> Tuple[jax.Array, MLSTMState]:
+    b_sz, t, d_model = x.shape
+    di = int(xl.proj_factor_mlstm * d_model)
+    dh = di // n_heads
+    xin = rms_norm(x, params["norm"])
+    up = jnp.einsum("btd,dc->btc", xin, params["w_up"].astype(x.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc, conv_tail = _conv1d(xi, params["conv_w"], params["conv_b"], state.conv)
+    xc = jax.nn.silu(xc)
+
+    def heads(v):  # [B,T,di] -> [B,H,T,dh]
+        return jnp.moveaxis(v.reshape(b_sz, -1, n_heads, dh), 2, 1)
+
+    q = heads(jnp.einsum("btc,ce->bte", xc, params["w_q"].astype(x.dtype)))
+    k = heads(jnp.einsum("btc,ce->bte", xc, params["w_k"].astype(x.dtype))) / math.sqrt(dh)
+    v = heads(jnp.einsum("btc,ce->bte", xi, params["w_v"].astype(x.dtype)))
+    li = jnp.moveaxis(
+        jnp.einsum("btc,ch->bth", xc.astype(jnp.float32), params["w_i"]) + params["b_i"], 2, 1
+    )
+    lf = jax.nn.log_sigmoid(
+        jnp.moveaxis(
+            jnp.einsum("btc,ch->bth", xc.astype(jnp.float32), params["w_f"]) + params["b_f"], 2, 1
+        )
+    )
+
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        q, k, v = (jnp.pad(a, [(0, 0), (0, 0), (0, pad), (0, 0)]) for a in (q, k, v))
+        li = jnp.pad(li, [(0, 0), (0, 0), (0, pad)], constant_values=-1e30)  # no write
+        lf = jnp.pad(lf, [(0, 0), (0, 0), (0, pad)])
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape(b_sz, n_heads, n_chunks, chunk, *a.shape[3:]), 2, 0
+        )
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qc, kc, vc, lfc, lic = inp
+        h, new = _mlstm_chunk(qc, kc, vc, lfc, lic, carry)
+        return new, h
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        body, (state.c, state.n, state.m),
+        (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(lf), to_chunks(li)),
+        unroll=n_chunks if unroll else 1,
+    )
+    h = jnp.moveaxis(hs, 0, 2).reshape(b_sz, n_heads, n_chunks * chunk, dh)[:, :, :t]
+    h = jnp.moveaxis(h, 1, 2).reshape(b_sz, t, di)
+    # per-head group norm, then gate and down-project
+    h = rms_norm(h.reshape(b_sz, t, n_heads, dh), jnp.ones((dh,))).reshape(b_sz, t, di)
+    h = h * params["gn"]
+    h = h.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("btc,cd->btd", h, params["w_down"].astype(x.dtype))
+    return out, MLSTMState(c=c_f, n=n_f, m=m_f, conv=conv_tail)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_params_spec(d_model: int, n_heads: int, xl: XLSTMConfig, dtype) -> dict:
+    dh = d_model // n_heads
+    dff = int(xl.proj_factor_slstm * d_model)
+    return {
+        "norm": ((d_model,), ones_init, jnp.float32),
+        "conv_w": ((xl.conv_width, d_model), dense_init, dtype),
+        "conv_b": ((d_model,), zeros_init, dtype),
+        "w_gates": ((d_model, 4 * d_model), dense_init, dtype),     # i,f,z,o
+        "r_gates": ((n_heads, dh, 4 * dh), dense_init, dtype),      # block-diag recurrent
+        "b_gates": ((4 * d_model,), _slstm_bias_init, jnp.float32),
+        "gn": ((d_model,), ones_init, jnp.float32),
+        "w_up": ((d_model, 2 * dff), dense_init, dtype),
+        "w_down": ((dff, d_model), dense_init, dtype),
+    }
+
+
+def _slstm_bias_init(key, shape, dtype):
+    d4 = shape[-1] // 4
+    b = jnp.zeros((4, d4), jnp.float32)
+    b = b.at[1].set(jnp.linspace(3.0, 6.0, d4))  # forget-gate bias positive
+    return jnp.broadcast_to(b.reshape(-1), shape).astype(dtype)
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array      # [B, d]
+    c: jax.Array      # [B, d]
+    n: jax.Array      # [B, d]
+    m: jax.Array      # [B, d]
+    conv: jax.Array   # [B, W-1, d]
+
+    @staticmethod
+    def init(batch, d_model, xl: XLSTMConfig, dtype=jnp.float32):
+        z = lambda: jnp.zeros((batch, d_model), jnp.float32)
+        return SLSTMState(
+            h=z(), c=z(), n=z(), m=jnp.full((batch, d_model), -1e30, jnp.float32),
+            conv=jnp.zeros((batch, xl.conv_width - 1, d_model), dtype),
+        )
+
+
+def slstm_forward(
+    xl: XLSTMConfig,
+    n_heads: int,
+    params: dict,
+    x: jax.Array,               # [B, T, d_model]
+    state: SLSTMState,
+    *,
+    chunk: int = 64,
+    unroll: bool = False,
+) -> Tuple[jax.Array, SLSTMState]:
+    b_sz, t, d_model = x.shape
+    dh = d_model // n_heads
+    xin = rms_norm(x, params["norm"])
+    xc, conv_tail = _conv1d(xin, params["conv_w"], params["conv_b"], state.conv)
+    xc = jax.nn.silu(xc)
+    # input contributions to the 4 gates: i,f from the conv path; z,o raw
+    wx = jnp.einsum("btd,dg->btg", xc, params["w_gates"].astype(x.dtype)[:, : 2 * d_model])
+    wzo = jnp.einsum("btd,dg->btg", xin, params["w_gates"].astype(x.dtype)[:, 2 * d_model :])
+    gates_x = jnp.concatenate([wx, wzo], axis=-1).astype(jnp.float32)  # [B,T,4d]
+
+    r = params["r_gates"].astype(jnp.float32)        # [H, dh, 4dh]
+    bias = params["b_gates"]
+
+    def step(carry, inp):
+        gx, valid = inp
+        h, c, n, m = carry
+        hr = h.reshape(b_sz, n_heads, dh)
+        rec = jnp.einsum("bhd,hdg->bhg", hr, r).reshape(b_sz, 4 * d_model)
+        # both gx and rec are laid out [i | f | z | o] over units
+        pre = gx + rec + bias
+        pi, pf, pz, po = jnp.split(pre, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(pf)
+        m_new = jnp.maximum(lf + m, pi)
+        i_g = jnp.exp(pi - m_new)
+        f_g = jnp.exp(lf + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(pz)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(po) * c_new / jnp.maximum(n_new, 1e-6)
+        # padded steps must not advance the state (streaming correctness)
+        keep = lambda new, old: jnp.where(valid, new, old)
+        return (keep(h_new, h), keep(c_new, c), keep(n_new, n), keep(m_new, m)), h_new
+
+    chunk = min(chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    gx = jnp.pad(gates_x, [(0, 0), (0, pad), (0, 0)]) if pad else gates_x
+    gx = jnp.moveaxis(gx.reshape(b_sz, n_chunks, chunk, -1), 1, 0)
+    valid = (jnp.arange(n_chunks * chunk) < t).reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        gchunk, vchunk = inp
+        carry, hs = jax.lax.scan(step, carry, (jnp.moveaxis(gchunk, 1, 0), vchunk))
+        return carry, jnp.moveaxis(hs, 0, 1)
+
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_body, (state.h, state.c, state.n, state.m), (gx, valid),
+        unroll=n_chunks if unroll else 1,
+    )
+    h = jnp.moveaxis(hs, 0, 1).reshape(b_sz, n_chunks * chunk, d_model)[:, :t]
+    h = rms_norm(h.reshape(b_sz, t, n_heads, dh), jnp.ones((dh,))).reshape(b_sz, t, d_model)
+    h = (h * params["gn"]).astype(x.dtype)
+    # gated up/down projection (proj_factor 4/3)
+    up = jnp.einsum("btd,dc->btc", h, params["w_up"].astype(x.dtype))
+    u, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum(
+        "btc,cd->btd", u * jax.nn.gelu(g, approximate=True), params["w_down"].astype(x.dtype)
+    )
+    return out, SLSTMState(h=h_f, c=c_f, n=n_f, m=m_f, conv=conv_tail)
+
+# ---------------------------------------------------------------------------
+# Stack driver: alternating (mLSTM, sLSTM) residual block pairs
+# ---------------------------------------------------------------------------
+
+
+def xlstm_pair_count(n_layers: int, xl: XLSTMConfig) -> int:
+    assert n_layers % xl.slstm_every == 0
+    return n_layers // xl.slstm_every
+
+
+class XLSTMStackState(NamedTuple):
+    """Stacked states for the whole trunk ([P, ...] per pair)."""
+    m: MLSTMState
+    s: SLSTMState
+
+    @staticmethod
+    def init(n_pairs, batch, d_model, n_heads, xl: XLSTMConfig, dtype=jnp.float32):
+        stack = lambda st: jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_pairs,) + a.shape).copy(), st)
+        return XLSTMStackState(
+            m=stack(MLSTMState.init(batch, d_model, n_heads, xl, dtype)),
+            s=stack(SLSTMState.init(batch, d_model, xl, dtype)),
+        )
+
+
+def xlstm_stack_apply(
+    xl: XLSTMConfig,
+    n_heads: int,
+    params: dict,                 # {"m_blocks": [P,...], "s_blocks": [P,...]}
+    x: jax.Array,                 # [B, T, d]
+    state: XLSTMStackState,
+    *,
+    chunk: int = 256,
+    slstm_chunk: int = 64,
+    remat: bool = True,
+    unroll: bool = False,
+) -> Tuple[jax.Array, XLSTMStackState]:
+    n_pairs = jax.tree.leaves(params["m_blocks"])[0].shape[0]
+
+    # costing builds (unroll=True) run sLSTM as ONE chunk: its strictly
+    # sequential recurrence is <1% of the cell FLOPs (see EXPERIMENTS.md
+    # costing caveats) and unrolling hundreds of chunk bodies makes the
+    # XLA:CPU costing compile pathological (hours).
+    s_chunk = 10**9 if unroll else slstm_chunk
+
+    def body(h, xs):
+        p_m, p_s, st_m, st_s = xs
+        out_m, st_m2 = mlstm_forward(
+            xl, n_heads, p_m, h, MLSTMState(*st_m), chunk=chunk, unroll=unroll)
+        h = h + out_m
+        out_s, st_s2 = slstm_forward(
+            xl, n_heads, p_s, h, SLSTMState(*st_s), chunk=s_chunk, unroll=False)
+        h = h + out_s
+        return h, (tuple(st_m2), tuple(st_s2))
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, (new_m, new_s) = jax.lax.scan(
+        body, x, (params["m_blocks"], params["s_blocks"], tuple(state.m), tuple(state.s)),
+        unroll=n_pairs if unroll else 1,
+    )
+    return x, XLSTMStackState(m=MLSTMState(*new_m), s=SLSTMState(*new_s))

@@ -1,0 +1,71 @@
+"""Error-feedback int8 gradient compression (beyond-paper, flag-gated).
+
+For bandwidth-bound DP meshes the gradient all-reduce dominates the
+collective term; block-int8 with error feedback cuts those bytes 4x while
+keeping convergence (the residual re-enters the next step's gradient, so
+the compression error is O(lr^2) in the trajectory — standard EF-SGD
+argument).
+
+Composition with the sharded train step: ``compress_tree`` runs *before*
+the optimizer (the psum'd gradients are quantized + dequantized with the
+per-job residual carried in the optimizer extras).  On a real fleet the
+quantized payload is what crosses the ICI; in the single-controller dry-run
+the collective-term saving is modeled in EXPERIMENTS.md SSPerf.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any   # pytree like grads, fp32
+
+
+def init_ef(params) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _quantize_block(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows = -(-n // block)
+    padded = jnp.pad(flat, (0, rows * block - n)).reshape(rows, block)
+    scale = jnp.maximum(jnp.abs(padded).max(axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(padded / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_block(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_tree(grads, ef: EFState) -> Tuple[Any, EFState, dict]:
+    """Quantize grads+residual to int8 blocks; return (dequantized grads,
+    new residual, stats).  The dequantized value is exactly what every
+    worker would reconstruct after the compressed all-reduce."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        if x.size < 256:
+            return x, jnp.zeros_like(x)
+        q, scale = _quantize_block(x)
+        deq = _dequantize_block(q, scale, x.shape)
+        return deq, x - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([o[0] for o in out])
+    new_r = treedef.unflatten([o[1] for o in out])
+    bytes_raw = sum(g.size * 4 for g in flat_g)
+    bytes_q = sum(g.size * 1 + -(-g.size // 256) * 4 if g.size >= 256 else g.size * 4
+                  for g in flat_g)
+    stats = {"compress_ratio": bytes_q / max(bytes_raw, 1)}
+    return new_g, EFState(residual=new_r), stats

@@ -1,0 +1,198 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms, all in seconds-per-step on TPU v5e, computed per device:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / (links * ICI_BW)
+
+``compiled.cost_analysis()`` (verified to report per-device, post-SPMD
+numbers) supplies FLOPs and bytes.  Collective bytes are parsed from the
+post-SPMD HLO text: we sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, count
+async ``-start`` ops once, and weight all-reduce 2x (ring RS+AG).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    ICI_LINKS_2D,
+    PEAK_FLOPS_BF16,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind (result-shape sized)."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue  # counted at -start
+        op = m.group("op")
+        nbytes = _bytes_of_type(m.group("type"))
+        # ring all-reduce = reduce-scatter + all-gather over the same payload
+        weight = 2.0 if op == "all-reduce" else 1.0
+        out[op] = out.get(op, 0.0) + nbytes * weight
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None      # 6*N*D (or 2*N*D for inference)
+    model_flops_ratio: Optional[float] = None  # model_flops / (flops*chips)
+
+    def row(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("coll_breakdown")
+        return d
+
+
+def analyze(
+    compiled,
+    hlo_text: Optional[str] = None,
+    *,
+    n_devices: int,
+    model_flops: Optional[float] = None,
+    links: int = ICI_LINKS_2D,
+    cost_scale: float = 1.0,
+) -> Roofline:
+    """``cost_scale`` multiplies all three terms — used when the costing
+    compile lowers one microbatch of a grad_accum=N step (terms x N)."""
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0)) * cost_scale
+    nbytes = float(ca.get("bytes accessed", 0.0)) * cost_scale
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = {k: v * cost_scale for k, v in collective_bytes(text).items()}
+    coll_total = float(sum(coll.values()))
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = coll_total / (links * ICI_BW_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    ratio = None
+    if model_flops is not None and flops > 0:
+        ratio = model_flops / (flops * n_devices)
+
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        coll_bytes_per_device=coll_total,
+        coll_breakdown=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        model_flops_ratio=ratio,
+    )
+
+
+def memory_stats(compiled) -> dict:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(m.argument_size_in_bytes),
+        "output_bytes": int(m.output_size_in_bytes),
+        "temp_bytes": int(m.temp_size_in_bytes),
+        "alias_bytes": int(m.alias_size_in_bytes),
+        "peak_estimate_bytes": int(
+            m.argument_size_in_bytes + m.output_size_in_bytes
+            + m.temp_size_in_bytes - m.alias_size_in_bytes
+        ),
+    }
+
+
+def raw_costs(compiled) -> dict:
+    """Raw per-device totals from one compiled artifact (pre-extrapolation)."""
+    ca = compiled.cost_analysis()
+    text = compiled.as_text()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": collective_bytes(text),
+    }
+
+
+def analyze_extrapolated(
+    cost_a: dict,
+    cost_b: dict,
+    depth_a: int,
+    depth_b: int,
+    depth_full: int,
+    *,
+    n_devices: int,
+    model_flops: Optional[float] = None,
+    links: int = ICI_LINKS_2D,
+    cost_scale: float = 1.0,
+) -> Roofline:
+    """Linear-in-depth extrapolation: cost(L) = base + L * per_layer.
+
+    Valid because every per-layer cost (matmuls, attention, FSDP gathers,
+    grad reduce-scatters) is depth-independent; the base captures embedding,
+    CE loss, and optimizer scalars.  Negative per-layer deltas (numerical
+    noise on tiny terms) are clamped to zero.
+    """
+    def extrap(va: float, vb: float) -> float:
+        per_layer = max((vb - va) / (depth_b - depth_a), 0.0)
+        base = max(va - per_layer * depth_a, 0.0)
+        return base + per_layer * depth_full
+
+    flops = extrap(cost_a["flops"], cost_b["flops"]) * cost_scale
+    nbytes = extrap(cost_a["bytes"], cost_b["bytes"]) * cost_scale
+    coll = {}
+    for op in set(cost_a["coll"]) | set(cost_b["coll"]):
+        coll[op] = extrap(cost_a["coll"].get(op, 0.0),
+                          cost_b["coll"].get(op, 0.0)) * cost_scale
+    coll_total = float(sum(coll.values()))
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = coll_total / (links * ICI_BW_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = None
+    if model_flops is not None and flops > 0:
+        ratio = model_flops / (flops * n_devices)
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=nbytes,
+        coll_bytes_per_device=coll_total, coll_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops, model_flops_ratio=ratio,
+    )

@@ -1,0 +1,42 @@
+"""TrainState: everything a transparent checkpoint must capture.
+
+The paper's "transparent C/R" maps to: (params, optimizer state, step, RNG,
+data-iterator cursor) — restoring this tuple and re-entering the train loop
+is bitwise-equivalent to never having been preempted (tested in
+tests/test_e2e_train.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    rng: jax.Array          # PRNG key consumed by dropout-like features
+    data_cursor: jax.Array  # [] int64-ish int32 cursor into the data stream
+
+    @property
+    def step(self) -> jax.Array:
+        return self.opt.step
+
+
+def init_train_state(params, seed: int = 0) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        rng=jax.random.PRNGKey(seed),
+        data_cursor=jnp.zeros((), jnp.int32),
+    )
+
+
+def train_state_shapes(model, seed: int = 0):
+    """ShapeDtypeStruct pytree of the full state (dry-run, no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(model.init(jax.random.PRNGKey(0)), seed)
+    )

@@ -1,0 +1,109 @@
+"""Training and serving step functions (the units the scheduler preempts at).
+
+``make_train_step`` builds a jit-able ``(state, batch) -> (state, metrics)``
+with optional gradient accumulation (scan over microbatches — bounds
+activation memory at large global batch) and gradient clipping.  All model
+compute runs in the config's compute dtype; master params/optimizer in fp32.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points the
+decode/prefill dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim import adamw
+from repro.train.state import TrainState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_accum: int = 1            # microbatches per step (scan)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    lr_fn = adamw.cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        accum = tcfg.grad_accum
+
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+        else:
+            # split the global batch into `accum` microbatches and scan;
+            # gradients accumulate in fp32.
+            def micro(batch_i, carry):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, batch_i)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, loss_acc + loss, aux_acc + metrics["aux_loss"]
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro_batches = jax.tree.map(split, batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, mb):
+                return micro(mb, carry), None
+
+            (g_sum, loss_sum, aux_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros(()), jnp.zeros(())), micro_batches)
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            loss = loss_sum / accum
+            metrics = {"ce_loss": loss, "aux_loss": aux_sum / accum,
+                       "tokens": jnp.zeros(())}
+
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = lr_fn(state.opt.step)
+        new_params, new_opt = adamw.update(
+            state.params, grads, state.opt, lr=lr,
+            b1=tcfg.b1, b2=tcfg.b2, weight_decay=tcfg.weight_decay)
+        new_state = TrainState(
+            params=new_params, opt=new_opt,
+            rng=jax.random.fold_in(state.rng, 1),
+            data_cursor=state.data_cursor + 1,
+        )
+        out_metrics = {
+            "loss": loss, "grad_norm": gnorm, "lr": lr,
+            "step": new_opt.step.astype(jnp.float32),
+            **{k: v for k, v in metrics.items() if k != "tokens"},
+        }
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step

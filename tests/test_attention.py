@@ -1,0 +1,114 @@
+"""Property tests for the chunked-attention primitive and cache writes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    cache_pos_write,
+    cache_write,
+    chunked_attention,
+    decode_attention,
+    ring_slots,
+    visibility_mask,
+)
+
+
+def naive_attention(q, k, v, qp, kp, causal=True, window=0, n_meta=0):
+    B, Sq, H, Dk = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, Sq, KVH, G, Dk).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qr, k.astype(jnp.float32)) / np.sqrt(Dk)
+    vis = visibility_mask(qp, kp, causal=causal, window=window, n_meta=n_meta)
+    s = jnp.where(vis[:, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, -1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seq=st.integers(3, 80),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 1)]),
+    d=st.sampled_from([8, 16]),
+    q_chunk=st.sampled_from([8, 16, 64]),
+    kv_chunk=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 5, 17]),
+)
+def test_chunked_attention_matches_naive(seq, heads, d, q_chunk, kv_chunk,
+                                         causal, window):
+    H, KVH = heads
+    n_meta = 2 if window else 0
+    key = jax.random.PRNGKey(seq * 131 + H)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, seq, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, seq, KVH, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, seq, KVH, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(seq), (2, seq))
+    out = chunked_attention(q, k, v, pos, pos, causal=causal, window=window,
+                            n_meta=n_meta, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    ref = naive_attention(q, k, v, pos, pos, causal, window, n_meta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_respects_invalid_slots():
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 2, 16, 4, 8
+    k = jax.random.normal(key, (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 1, H, D))
+    kv_pos = jnp.where(jnp.arange(S) < 5, jnp.arange(S), -1)[None].repeat(B, 0)
+    qpos = jnp.full((B, 1), 4)
+    out = decode_attention(q, k, v, qpos, kv_pos)
+    # equal to attending only the 5 valid slots
+    out5 = decode_attention(q, k[:, :5], v[:, :5], qpos, kv_pos[:, :5])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out5), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    size=st.integers(2, 24),
+    n_pinned=st.integers(0, 6),
+    cursor=st.integers(0, 60),
+    n_new=st.integers(1, 40),
+)
+def test_ring_slots_properties(size, n_pinned, cursor, n_new):
+    n_pinned = min(n_pinned, size - 1)
+    slots = np.asarray(ring_slots(jnp.int32(cursor), n_new, size, n_pinned))
+    idx = cursor + np.arange(n_new)
+    live = slots[slots < size]
+    # pinned entries land in their own slot; ring entries in [n_pinned, size)
+    for i, s in enumerate(slots):
+        if s < size:
+            if idx[i] < n_pinned:
+                assert s == idx[i]
+            else:
+                assert n_pinned <= s < size
+    # no duplicate live slots (last-writer-wins was resolved by dropping)
+    assert len(set(live.tolist())) == len(live)
+
+
+def test_cache_write_ring_semantics_with_pinned_meta():
+    """Meta slots survive arbitrary wraparound; ring holds the newest."""
+    B, S, KVH, D, n_meta = 1, 6, 1, 2, 2  # ring of 4
+    k = jnp.zeros((B, S, KVH, D))
+    v = jnp.zeros((B, S, KVH, D))
+    def val(i):
+        return jnp.full((B, 1, KVH, D), float(i))
+    # write positions 0..9 one at a time
+    for i in range(10):
+        k, v = cache_write(k, v, val(i), val(i), jnp.int32(i), n_pinned=n_meta)
+    got = np.asarray(k[0, :, 0, 0])
+    assert got[0] == 0 and got[1] == 1          # pinned meta slots
+    assert sorted(got[2:].tolist()) == [6, 7, 8, 9]  # newest 4 in the ring
+
+
+def test_visibility_mask_meta_tokens():
+    qp = jnp.asarray([[10]])
+    kp = jnp.asarray([[0, 1, 2, 7, 8, 9, 10]])
+    vis = visibility_mask(qp, kp, causal=True, window=3, n_meta=2)
+    # meta positions 0,1 visible; 2 out of window; 8,9,10 in window; 7 not
+    assert vis[0, 0].tolist() == [True, True, False, False, True, True, True]

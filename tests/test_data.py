@@ -1,0 +1,53 @@
+"""Data pipeline: determinism, resumability, shape/dtype contracts."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def test_batch_at_is_pure_function_of_cursor():
+    cfg = DataConfig(vocab=512, seq_len=64, global_batch=4, seed=3)
+    a = SyntheticLM(cfg)
+    b = SyntheticLM(cfg)
+    for cur in (0, 5, 1000):
+        ba, bb = a.batch_at(cur), b.batch_at(cur)
+        assert (ba["tokens"] == bb["tokens"]).all()
+        assert (ba["labels"] == bb["labels"]).all()
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab=512, seq_len=64, global_batch=2, seed=0)
+    b = SyntheticLM(cfg).batch_at(0)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+
+
+def test_resume_mid_stream_is_identical():
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=2, seed=1)
+    ds = SyntheticLM(cfg)
+    full = [b["tokens"] for (_, b), _ in zip(ds.iterator(0), range(6))]
+    resumed = [b["tokens"] for (_, b), _ in zip(ds.iterator(3), range(3))]
+    for x, y in zip(full[3:], resumed):
+        assert (x == y).all()
+
+
+def test_different_cursors_differ_and_tokens_in_range():
+    cfg = DataConfig(vocab=100, seq_len=128, global_batch=2, seed=1)
+    ds = SyntheticLM(cfg)
+    b0, b1 = ds.batch_at(0), ds.batch_at(1)
+    assert not (b0["tokens"] == b1["tokens"]).all()
+    for b in (b0, b1):
+        assert b["tokens"].dtype == np.int32
+        assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_stream_has_learnable_structure():
+    """Motif reuse should make adjacent-token mutual information > noise:
+    check that the bigram distribution is far from uniform."""
+    cfg = DataConfig(vocab=64, seq_len=256, global_batch=8, seed=0,
+                     n_patterns=16, pattern_len=8)
+    b = SyntheticLM(cfg).batch_at(0)
+    toks = b["tokens"].reshape(-1)
+    pairs = toks[:-1] * 64 + toks[1:]
+    counts = np.bincount(pairs, minlength=64 * 64).astype(np.float64)
+    p = counts / counts.sum()
+    entropy = -(p[p > 0] * np.log(p[p > 0])).sum()
+    assert entropy < 0.8 * np.log(64 * 64)   # far from uniform bigrams

@@ -1,0 +1,140 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ckpt_codec.ops import (
+    dequantize_array,
+    quantize_array,
+    roundtrip_error,
+)
+from repro.kernels.ckpt_codec.ref import quantize_ref
+from repro.kernels.flash_attention.ops import (
+    flash_attention,
+    flash_attention_reference,
+)
+from repro.kernels.mlstm_scan.ops import mlstm_chunked, mlstm_reference
+from repro.kernels.moe_gmm.ops import expert_swiglu, expert_swiglu_ref
+from repro.kernels.ssm_scan.ops import selective_scan, selective_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, S, H, KVH, D, causal, window, meta, bq, bk, dtype
+    (2, 128, 4, 2, 64, True, 0, 0, 64, 64, jnp.float32),
+    (1, 200, 4, 4, 32, True, 0, 0, 64, 64, jnp.float32),
+    (2, 256, 8, 2, 64, False, 0, 0, 128, 128, jnp.float32),
+    (1, 256, 4, 1, 64, True, 64, 16, 64, 64, jnp.float32),
+    (1, 72, 2, 2, 16, True, 0, 0, 64, 64, jnp.float32),
+    (2, 96, 4, 2, 128, True, 48, 8, 32, 32, jnp.float32),
+    (1, 128, 4, 2, 64, True, 0, 0, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, S, H, KVH, D, causal, win, meta, bq, bk, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KVH, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KVH, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=win, n_meta=meta,
+                          block_q=bq, block_k=bk, interpret=True)
+    ref = flash_attention_reference(q, k, v, causal=causal, window=win, n_meta=meta)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 96, 160, 224), (2, 128, 64, 64),
+                                   (8, 32, 48, 96), (1, 256, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_gmm_vs_oracle(shape, dtype):
+    E, C, d, f = shape
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (E, C, d)) * 0.3).astype(dtype)
+    wg = (jax.random.normal(ks[1], (E, d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, f, d)) * 0.05).astype(dtype)
+    out = expert_swiglu(x, wg, wu, wd, interpret=True)
+    ref = expert_swiglu_ref(x, wg, wu, wd)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [(2, 100, 64, 8, 32, 32), (1, 64, 32, 16, 16, 32),
+                                 (3, 33, 16, 4, 16, 16)])
+def test_ssm_scan_vs_oracle(cfg):
+    B, S, di, ds, chunk, bd = cfg
+    ks = jax.random.split(KEY, 6)
+    delta = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di))) * 0.1
+    b = jax.random.normal(ks[1], (B, S, ds))
+    c = jax.random.normal(ks[2], (B, S, ds))
+    x = jax.random.normal(ks[3], (B, S, di))
+    a = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    h0 = jax.random.normal(ks[5], (B, di, ds)) * 0.1
+    y, hf = selective_scan(delta, b, c, x, a, h0, chunk=chunk, block_d=bd,
+                           interpret=True)
+    yr, hr = selective_scan_ref(delta, b, c, x, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunked scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [(3, 80, 32, 32), (1, 64, 16, 32),
+                                 (2, 100, 64, 64), (1, 37, 16, 16)])
+def test_mlstm_vs_sequential_oracle(cfg):
+    BH, S, dh, chunk = cfg
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (BH, S, dh))
+    k = jax.random.normal(ks[1], (BH, S, dh)) / np.sqrt(dh)
+    v = jax.random.normal(ks[2], (BH, S, dh))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (BH, S)) + 3)
+    li = jax.random.normal(ks[4], (BH, S))
+    h, (c, n, m) = mlstm_chunked(q, k, v, lf, li, chunk=chunk, interpret=True)
+    hr, (cr, nr, mr) = mlstm_reference(q, k, v, lf, li)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1000, 33), (128,), (7, 5, 9), (2048, 128)])
+def test_ckpt_codec_matches_ref_and_bounds_error(shape):
+    x = jax.random.normal(KEY, shape) * 3.0
+    q, s = quantize_array(x, interpret=True)
+    flat = jnp.pad(x.reshape(-1), (0, q.size - x.size)).reshape(-1, 128)
+    qr, sr = quantize_ref(flat)
+    assert (np.asarray(q) == np.asarray(qr)).all()
+    y = dequantize_array(q, s, shape=shape)
+    # per-block absmax int8: error <= scale/2 <= absmax/254
+    err = np.abs(np.asarray(y - x))
+    bound = np.abs(np.asarray(x)).max() / 127.0
+    assert err.max() <= bound + 1e-6
+    assert roundtrip_error(x) < 1e-2

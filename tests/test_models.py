@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (reduced same-family configs, real CPU run):
+one train step (loss + grads finite), prefill + decode consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import build_model, count_params
+
+
+def _batch(cfg, key, b=2, s=12):
+    batch = {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (b, s), 0, cfg.vocab),
+    }
+    if cfg.family == "vlm":
+        batch["frontend"] = jax.random.normal(
+            key, (b, cfg.vision.n_patches, cfg.vision.vision_dim), jnp.float32)
+    if cfg.family == "audio":
+        batch["frontend"] = jax.random.normal(
+            key, (b, cfg.audio.n_audio_ctx, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, q_chunk=8, kv_chunk=8)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert loss.shape == ()
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, q_chunk=8, kv_chunk=8)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    b, s = 2, 12
+    batch = _batch(cfg, key, b, s)
+    cache = model.init_cache(b, s + 4)
+    cache, logits = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert jnp.isfinite(logits).all(), arch
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    cache, logits2 = jax.jit(model.decode_step)(params, cache, tok)
+    assert logits2.shape == (b, 1, cfg.vocab)
+    assert jnp.isfinite(logits2).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "minicpm3-4b", "xlstm-350m",
+                                  "hymba-1.5b", "whisper-base"])
+def test_prefill_decode_matches_teacher_forcing(arch):
+    """Decoding token t with a cache must equal position t of a full
+    forward pass — serve path == train path.  fp32 compute so the check
+    exercises logic, not bf16 reduction noise."""
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32")
+    model = build_model(cfg, q_chunk=8, kv_chunk=8)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    b, s = 2, 10
+    batch = _batch(cfg, key, b, s)
+
+    # full prefill over all s tokens gives last logits
+    cache = model.init_cache(b, s + 2, dtype=jnp.float32)
+    cache_full, logits_full = jax.jit(model.prefill)(params, batch, cache)
+
+    # prefill s-1 tokens then decode token s-1
+    batch_prefix = dict(batch, tokens=batch["tokens"][:, : s - 1])
+    cache = model.init_cache(b, s + 2, dtype=jnp.float32)
+    cache_p, _ = jax.jit(model.prefill)(params, batch_prefix, cache)
+    cache_p, logits_dec = jax.jit(model.decode_step)(
+        params, cache_p, batch["tokens"][:, s - 1 :])
+    err = float(jnp.abs(logits_full - logits_dec).max())
+    assert err < 1e-4, f"{arch}: prefill/decode mismatch {err}"
+
+
+def test_full_configs_match_assignment():
+    """The full-size configs carry the exact assigned hyperparameters."""
+    spec = {
+        "deepseek-moe-16b": (28, 2048, 16, 16, 102400),
+        "dbrx-132b": (40, 6144, 48, 8, 100352),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 128256),
+        "hymba-1.5b": (32, 1600, 25, 5, 32001),
+        "glm4-9b": (40, 4096, 32, 2, 151552),
+        "minicpm3-4b": (62, 2560, 40, 40, 73448),
+        "internlm2-1.8b": (24, 2048, 16, 8, 92544),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 131072),
+        "xlstm-350m": (24, 1024, 4, 4, 50304),
+        "whisper-base": (6, 512, 8, 8, 51865),
+    }
+    for arch, (nl, d, h, kv, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.vocab) \
+            == (nl, d, h, kv, v), arch
+
+
+def test_param_counts_are_in_the_right_ballpark():
+    """Total params should be within ~35% of the nameplate size."""
+    expect = {
+        "deepseek-moe-16b": 16.4e9,
+        "dbrx-132b": 132e9,
+        "llama-3.2-vision-11b": 10.6e9,
+        "hymba-1.5b": 1.5e9,
+        "glm4-9b": 9.4e9,
+        "minicpm3-4b": 4.0e9,
+        "internlm2-1.8b": 1.9e9,
+        "mistral-nemo-12b": 12.2e9,
+        "xlstm-350m": 0.35e9,
+        "whisper-base": 0.072e9,
+    }
+    for arch, n in expect.items():
+        got = count_params(get_config(arch))["total"]
+        ratio = got / n
+        assert 0.6 < ratio < 1.5, f"{arch}: {got/1e9:.2f}B vs nameplate {n/1e9:.1f}B"

@@ -1,0 +1,73 @@
+"""Property test: the vectorized JAX scheduler is step-equivalent to the
+Python Algorithm-1 reference on randomized workloads."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import omfs_jax
+from repro.core.simulator import simulate
+from repro.core.types import Job, JobClass, JobState, SchedulerConfig, User
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+
+def _signatures(users, jobs, cfg, horizon):
+    res = simulate(users, [j.clone() for j in jobs], cfg, horizon)
+    tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon)
+    py = [t[1:] for t in res.schedule_signature()]   # drop ids
+    jx = [t[1:] for t in omfs_jax.signature_from_table(tbl)]
+    return py, jx, res, busy
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    quantum=st.integers(0, 20),
+    cr=st.integers(0, 5),
+    n_users=st.integers(2, 4),
+)
+def test_python_jax_equivalence(seed, quantum, cr, n_users):
+    spec = WorkloadSpec(
+        n_users=n_users, horizon=120, cpu_total=32, seed=seed,
+        arrival_rate=0.1, mean_work=30,
+    )
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:40]
+    if not jobs:
+        return
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=cr)
+    py, jx, _, _ = _signatures(users, jobs, cfg, spec.horizon)
+    assert py == jx
+
+
+@pytest.mark.parametrize("drop_killed", [True, False])
+def test_equivalence_kill_policies(drop_killed):
+    spec = WorkloadSpec(n_users=3, horizon=150, cpu_total=32, seed=7,
+                        arrival_rate=0.12, mean_work=40,
+                        class_mix=(0.1, 0.6, 0.3))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:40]
+    cfg = SchedulerConfig(cpu_total=32, quantum=5, drop_killed=drop_killed)
+    py, jx, _, _ = _signatures(users, jobs, cfg, spec.horizon)
+    assert py == jx
+
+
+def test_busy_series_matches_python_log():
+    spec = WorkloadSpec(n_users=3, horizon=100, cpu_total=32, seed=3)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    cfg = SchedulerConfig(cpu_total=32, quantum=10)
+    res = simulate(users, [j.clone() for j in jobs], cfg, 100)
+    _, busy = omfs_jax.simulate_jax(users, jobs, cfg, 100)
+    py_busy = np.array([t.busy for t in res.log])
+    assert (np.asarray(busy) == py_busy).all()
+
+
+def test_beyond_paper_flags_equivalent_too():
+    spec = WorkloadSpec(n_users=3, horizon=120, cpu_total=32, seed=11)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    cfg = SchedulerConfig(
+        cpu_total=32, quantum=5,
+        victim_filter_over_entitlement=True, avoid_self_eviction=True)
+    py, jx, _, _ = _signatures(users, jobs, cfg, spec.horizon)
+    assert py == jx

@@ -1,0 +1,74 @@
+"""Roofline machinery: the HLO collective-byte parser and term math."""
+import pytest
+
+from repro.roofline.analysis import _bytes_of_type, collective_bytes
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+fused_computation {
+  p0 = bf16[128,256]{1,0} parameter(0)
+  ROOT add = bf16[128,256]{1,0} add(p0, p0)
+}
+
+ENTRY main {
+  %p = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%p), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %ars = f32[512]{0} reduce-scatter(%y), dimensions={0}
+  %a2a = (bf16[64,32]{1,0}, bf16[64,32]{1,0}) all-to-all(%q, %r)
+  %cp = u8[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ag2 = bf16[99]{0} all-gather-start(%w), dimensions={0}
+  %agd = bf16[99]{0} all-gather-done(%ag2)
+  ROOT %t = tuple()
+}
+"""
+
+
+def test_bytes_of_type():
+    assert _bytes_of_type("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert _bytes_of_type("f32[1024]{0}") == 4096
+    assert _bytes_of_type("(bf16[2,2]{1,0}, f32[3]{0})") == 8 + 12
+    assert _bytes_of_type("pred[]") == 1
+
+
+def test_collective_bytes_parses_and_weights():
+    got = collective_bytes(HLO_SAMPLE)
+    assert got["all-gather"] == 2048 * 256 * 2 + 99 * 2  # -start counted, -done not
+    assert got["all-reduce"] == 1024 * 4 * 2             # x2 ring RS+AG
+    assert got["reduce-scatter"] == 512 * 4
+    assert got["all-to-all"] == 64 * 32 * 2 * 2          # tuple elements summed
+    assert got["collective-permute"] == 16
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.roofline.analysis import Roofline, analyze
+
+    class FakeCompiled:
+        def cost_analysis(self):
+            return {"flops": 197e12, "bytes accessed": 819e9 / 2}
+
+        def as_text(self):
+            return HLO_SAMPLE
+
+    rf = analyze(FakeCompiled(), n_devices=4, model_flops=197e12 * 2)
+    assert abs(rf.compute_s - 1.0) < 1e-9
+    assert abs(rf.memory_s - 0.5) < 1e-9
+    assert rf.bottleneck == "compute"
+    assert abs(rf.model_flops_ratio - 0.5) < 1e-9
+
+
+def test_cost_scale_applies_to_all_terms():
+    from repro.roofline.analysis import analyze
+
+    class FakeCompiled:
+        def cost_analysis(self):
+            return {"flops": 1e12, "bytes accessed": 1e9}
+
+        def as_text(self):
+            return HLO_SAMPLE
+
+    r1 = analyze(FakeCompiled(), n_devices=1)
+    r4 = analyze(FakeCompiled(), n_devices=1, cost_scale=4.0)
+    assert abs(r4.compute_s / r1.compute_s - 4.0) < 1e-9
+    assert abs(r4.collective_s / r1.collective_s - 4.0) < 1e-9
