@@ -1,11 +1,18 @@
-"""Fleet-scale scheduler throughput: Python reference vs vectorized JAX.
+"""Fleet-scale scheduler throughput: Python reference vs vectorized JAX,
+and — the PR-2 headline — the reference O(J)-per-admission JAX pass vs the
+incremental-aggregate pass (`core.omfs_jax.make_omfs_pass(incremental=True)`,
+DESIGN.md §Incremental aggregates).
 
-The JAX simulator is what makes 1000+-node / 10k+-job what-if studies cheap
-(DESIGN SS2) — this benchmark measures ticks/second for both at increasing
-job counts, with the SLURM-style ``pass_depth`` bound for the O(J^2) pass.
+The JAX simulator is what makes 1000+-node / 100k-job what-if studies cheap —
+this benchmark measures ticks/second at increasing job counts, with the
+SLURM-style ``pass_depth`` bound for the O(J^2) pass, and asserts the
+optimized pass produces bit-identical schedule signatures to the reference.
+
+``--smoke`` runs one tiny case (CI keeps the hot path importable + correct).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -17,33 +24,79 @@ from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
 
 
-def main() -> None:
-    horizon = 200
-    for n_jobs, cpu_total, pass_depth in ((100, 256, None), (400, 1024, 64),
-                                          (2000, 4096, 64)):
-        spec = WorkloadSpec(n_users=8, horizon=horizon, cpu_total=cpu_total,
-                            seed=1, arrival_rate=0.3, mean_work=60)
-        users = make_users(spec)
-        jobs = make_jobs(spec, users)[:n_jobs]
+def _workload(n_jobs: int, cpu_total: int, n_users: int = 16,
+              arrival_rate: float = 0.5, seed: int = 1):
+    """A workload that actually *reaches* ``n_jobs`` table rows: the spec
+    horizon scales with the target so the arrival process generates enough
+    jobs (jobs past the simulated horizon still cost O(J) table work, which
+    is exactly the scale knob under test)."""
+    gen_horizon = max(200, int(1.5 * n_jobs / (n_users * arrival_rate)))
+    spec = WorkloadSpec(n_users=n_users, horizon=gen_horizon,
+                        cpu_total=cpu_total, seed=seed,
+                        arrival_rate=arrival_rate, mean_work=60)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:n_jobs]
+    assert len(jobs) == n_jobs, f"workload too small: {len(jobs)} < {n_jobs}"
+    return users, jobs
 
-        if n_jobs <= 400:  # Python reference gets slow fast
-            t0 = time.perf_counter()
-            simulate(users, [j.clone() for j in jobs],
-                     SchedulerConfig(cpu_total=cpu_total, quantum=10), horizon)
-            t_py = time.perf_counter() - t0
-            emit(f"sched_scale/python_{n_jobs}jobs_ticks_per_s",
-                 horizon / t_py, f"cpus={cpu_total}")
 
-        cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
-        # compile once
-        tbl, _ = omfs_jax.simulate_jax(users, jobs, cfg, 1, pass_depth)
+def _time_jax(users, jobs, cfg, horizon, pass_depth, incremental):
+    # warm up with the same shapes so compilation stays out of the timing
+    _, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth,
+                                    incremental=incremental)
+    jax.block_until_ready(busy)
+    t0 = time.perf_counter()
+    tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth,
+                                      incremental=incremental)
+    jax.block_until_ready(busy)
+    return tbl, busy, time.perf_counter() - t0
+
+
+def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
+    users, jobs = _workload(n_jobs, cpu_total)
+    cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
+
+    if n_jobs <= 400:  # Python reference gets slow fast
         t0 = time.perf_counter()
-        tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth)
-        jax.block_until_ready(busy)
-        t_jax = time.perf_counter() - t0
-        emit(f"sched_scale/jax_{n_jobs}jobs_ticks_per_s", horizon / t_jax,
-             f"cpus={cpu_total};pass_depth={pass_depth};"
-             f"util={float(busy.mean())/cpu_total:.3f}")
+        simulate(users, [j.clone() for j in jobs], cfg, horizon)
+        t_py = time.perf_counter() - t0
+        emit(f"sched_scale/python_{n_jobs}jobs_ticks_per_s",
+             horizon / t_py, f"cpus={cpu_total}")
+
+    tbl_ref, _, t_ref = _time_jax(users, jobs, cfg, horizon, pass_depth, False)
+    emit(f"sched_scale/jax_ref_{n_jobs}jobs_ticks_per_s", horizon / t_ref,
+         f"cpus={cpu_total};pass_depth={pass_depth}")
+
+    tbl_inc, busy, t_inc = _time_jax(users, jobs, cfg, horizon, pass_depth, True)
+    emit(f"sched_scale/jax_inc_{n_jobs}jobs_ticks_per_s", horizon / t_inc,
+         f"cpus={cpu_total};pass_depth={pass_depth};"
+         f"util={float(busy.mean())/cpu_total:.3f}")
+
+    assert omfs_jax.tables_equal(tbl_ref, tbl_inc), \
+        f"incremental pass changed the schedule at J={n_jobs}"
+    emit(f"sched_scale/incremental_speedup_{n_jobs}jobs", t_ref / t_inc,
+         "x vs reference pass (identical signatures)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny case for CI (seconds, still asserts "
+                         "signature equality)")
+    ap.add_argument("--full", action="store_true",
+                    help="include the J=100k case")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cases = ((64, 128, None, 40),)
+    else:
+        cases = [(100, 256, None, 200), (400, 1024, 64, 200),
+                 (2000, 4096, 64, 200), (10_000, 8192, 64, 100)]
+        if args.full:
+            cases.append((100_000, 16384, 32, 50))
+
+    for n_jobs, cpu_total, pass_depth, horizon in cases:
+        run_case(n_jobs, cpu_total, pass_depth, horizon)
 
 
 if __name__ == "__main__":

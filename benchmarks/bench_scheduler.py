@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import engine
 from repro.core.baselines import ALL_BASELINES
 from repro.core.metrics import compute_metrics
 from repro.core.simulator import simulate
@@ -95,11 +96,45 @@ def bench_quantum() -> None:
              f"wait={m.mean_wait:.1f}")
 
 
+def bench_policy_matrix() -> None:
+    """Every registered policy on both engine backends, one comparison table:
+    utilization, mean wait, preemption/checkpoint counts (paper Table,
+    implied, now runnable at either fidelity)."""
+    spec = WorkloadSpec(n_users=4, horizon=400, cpu_total=64, seed=9,
+                        arrival_rate=0.08, mean_work=40)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)
+    cfg = SchedulerConfig(cpu_total=64, quantum=10, cr_overhead=2)
+
+    rows = []
+    for name in engine.POLICIES:
+        for backend in ("python", "jax"):
+            # engine.simulate never mutates its input jobs (python clones,
+            # jax only reads), so the same list serves every iteration
+            res = engine.simulate(users, jobs, cfg,
+                                  spec.horizon, policy=name, backend=backend)
+            s = res.summary()
+            rows.append(s)
+            emit(f"policy_matrix/{name}_{backend}_util", s["utilization"],
+                 f"wait={s['mean_wait']:.1f};preempt={s['preemptions']};"
+                 f"ckpt={s['checkpoints']};killed={s['killed']}")
+
+    hdr = ("policy", "backend", "utilization", "mean_wait", "preemptions",
+           "checkpoints", "killed", "done")
+    widths = [max(len(h), 16) for h in hdr]
+    print("\n" + "  ".join(h.ljust(w) for h, w in zip(hdr, widths)))
+    for s in rows:
+        print("  ".join(
+            (f"{s[h]:.3f}" if isinstance(s[h], float) else str(s[h])).ljust(w)
+            for h, w in zip(hdr, widths)))
+
+
 def main() -> None:
     bench_utilization()
     bench_reclaim_latency()
     bench_oversub()
     bench_quantum()
+    bench_policy_matrix()
 
 
 if __name__ == "__main__":

@@ -1,12 +1,15 @@
 """OMFS driving *real* JAX training jobs: the paper's mechanism end-to-end.
 
-``ClusterExecutor`` runs the tick loop of ``core.simulator`` but with real
-work: every RUNNING job advances ``steps_per_tick`` real optimizer steps on
-the local device pool; Algorithm 1 decides admission/eviction; eviction of a
-checkpointable job triggers a **fast-tier checkpoint** (params, optimizer,
-RNG, data cursor) and a restart restores it **transparently** — the user's
-train loop (`TrainJob`) contains zero checkpoint logic of its own, which is
-the DMTCP property the paper builds on.
+``ClusterExecutor`` is a thin adapter over ``core.engine.tick_python`` —
+the same tick kernel the simulator uses — but with real work: every RUNNING
+job advances ``steps_per_tick`` real optimizer steps on the local device
+pool (the engine's ``work_fn`` hook); any registered policy decides
+admission/eviction; the engine's transition report drives the C/R hooks:
+eviction of a checkpointable job triggers a **fast-tier checkpoint**
+(params, optimizer, RNG, data cursor) and a restart restores it
+**transparently** — the user's train loop (`TrainJob`) contains zero
+checkpoint logic of its own, which is the DMTCP property the paper builds
+on.
 
 The executor is cooperative and single-process (the container has one CPU
 device); scheduler accounting still runs on the job's declared `cpus`, so
@@ -24,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, ManagerConfig
+from repro.core import engine
 from repro.core.omfs import scheduler_pass
 from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
@@ -103,37 +107,33 @@ class ClusterExecutor:
 
     # -- one tick ---------------------------------------------------------------
     def tick(self) -> None:
+        """One engine tick: real work rides the ``work_fn`` hook, C/R rides
+        the transition report — the tick loop itself lives in core.engine."""
         st = self.state
         t = st.time
-        # 1. arrivals
-        for d in st.jobs.values():
-            if d.state == JobState.UNSUBMITTED and d.submit_time <= t:
-                d.state = JobState.PENDING
-        # 2. real work for running jobs + completion accounting
-        for d in st.running_jobs():
+
+        def work_fn(d: Job) -> None:
             mj = self.jobs[d.id]
             for _ in range(self.steps_per_tick):
                 mj.train_job.run_step()
-            d.progress += 1
-            if d.progress >= d.work + d.overhead:
-                d.state = JobState.DONE
-                d.finish_time = t
-                self.events.append(f"t={t} job{d.id} DONE")
-                mj.train_job.release()
-        # 3. scheduling pass; watch for state transitions we must act on
-        pre = {jid: d.state for jid, d in st.jobs.items()}
-        decisions = self.policy(st)
-        for jid, d in st.jobs.items():
-            mj = self.jobs[jid]
-            was, now = pre[jid], d.state
+
+        def on_complete(d: Job) -> None:
+            self.events.append(f"t={t} job{d.id} DONE")
+            self.jobs[d.id].train_job.release()
+
+        _, transitions = engine.tick_python(
+            st, self.policy, work_fn=work_fn, on_complete=on_complete)
+
+        for d, was, now in transitions:
+            mj = self.jobs[d.id]
             if was == JobState.RUNNING and now in (JobState.PENDING, JobState.KILLED):
                 # evicted: transparent checkpoint if the class allows it
                 if now == JobState.PENDING and mj.train_job.state is not None:
                     mj.ckpt.save(int(mj.train_job.state.step), mj.train_job.snapshot_state())
                     mj.checkpoints += 1
-                    self.events.append(f"t={t} job{jid} CHECKPOINTED+EVICTED")
+                    self.events.append(f"t={t} job{d.id} CHECKPOINTED+EVICTED")
                 else:
-                    self.events.append(f"t={t} job{jid} KILLED")
+                    self.events.append(f"t={t} job{d.id} KILLED")
                 mj.train_job.release()
             elif was != JobState.RUNNING and now == JobState.RUNNING:
                 # (re)started: restore transparently if a snapshot exists
@@ -141,10 +141,10 @@ class ClusterExecutor:
                     state, name = mj.ckpt.restore(mj.template())
                     mj.train_job.restore_state(state)
                     mj.restores += 1
-                    self.events.append(f"t={t} job{jid} RESTORED {name}")
+                    self.events.append(f"t={t} job{d.id} RESTORED {name}")
                 elif mj.train_job.state is None:
                     mj.train_job.cold_start()
-                    self.events.append(f"t={t} job{jid} COLD START")
+                    self.events.append(f"t={t} job{d.id} COLD START")
         st.time += 1
 
     def run(self, horizon: int) -> None:

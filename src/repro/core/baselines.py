@@ -98,7 +98,7 @@ def make_backfill(estimate_error: float = 0.0, with_cr: bool = False) -> Callabl
         elif with_cr:
             # Niu et al.: preempt checkpointable *backfilled* jobs to start
             # the head job now instead of waiting for the reservation.
-            victims = [v for v in sorted_victims(state) if getattr(v, "_backfilled", False)]
+            victims = [v for v in sorted_victims(state) if v.backfilled]
             freed = 0
             planned = []
             for v in victims:
@@ -133,7 +133,7 @@ def make_backfill(estimate_error: float = 0.0, with_cr: bool = False) -> Callabl
                 if est_end > head_start and not _fits_alongside_head(state, job, head):
                     decisions.append(_deny(job, "would delay head reservation"))
                     continue
-            job._backfilled = True  # type: ignore[attr-defined]
+            job.backfilled = True
             decisions.append(_admit(state, job, "backfilled"))
         return decisions
 

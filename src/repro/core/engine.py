@@ -1,0 +1,343 @@
+"""Unified scheduling engine: one tick kernel, pluggable policies, two backends.
+
+The tick protocol is defined ONCE here and shared by every consumer:
+
+  1. arrivals   — jobs with ``submit_time <= t`` become PENDING,
+  2. progress   — every running job accrues one work unit; completed jobs
+                  free their CPUs,
+  3. scheduling — one policy pass over the pending-queue snapshot,
+  4. metrics    — per-tick accounting (busy CPUs, per-user usage).
+
+``tick_python`` runs it over `core.types.ClusterState` with any Python
+policy (`core.omfs.scheduler_pass`, `core.baselines.*`, or user callables);
+``tick_jax`` runs the identical semantics over the fixed-size `JobTable`
+(`core.omfs_jax`) with any vectorized pass.  `core.simulator`,
+`core.omfs_jax.simulate_jax`, and `cluster.executor.ClusterExecutor` are
+thin adapters over these two kernels — there is no other tick loop in the
+repo (DESIGN.md §Engine).
+
+``simulate(users, jobs, cfg, horizon, policy=..., backend=...)`` is the
+single entry point: every registered policy runs on every backend, and
+`EngineResult.signature()` is directly comparable across backends, which is
+what the per-policy Python-vs-JAX property tests assert.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import omfs_jax, policies_jax
+from repro.core.baselines import ALL_BASELINES
+from repro.core.omfs import Decision, scheduler_pass
+from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
+
+PythonPolicy = Callable[[ClusterState], List[Decision]]
+# JAX policy contract: pass_fn(cfg, entitled[U], t, JobTable) -> JobTable
+JaxPass = Callable[[SchedulerConfig, jax.Array, jax.Array, "omfs_jax.JobTable"],
+                   "omfs_jax.JobTable"]
+JaxPassFactory = Callable[[Optional[int]], JaxPass]
+
+
+# ---------------------------------------------------------------------------
+# Policy registry: every policy names its Python pass and its JAX-pass factory
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    python_pass: PythonPolicy
+    jax_factory: JaxPassFactory
+
+
+POLICIES: Dict[str, PolicySpec] = {}
+
+
+def register_policy(name: str, python_pass: PythonPolicy,
+                    jax_factory: JaxPassFactory) -> PolicySpec:
+    spec = PolicySpec(name, python_pass, jax_factory)
+    POLICIES[name] = spec
+    return spec
+
+
+register_policy("omfs", scheduler_pass,
+                lambda pass_depth=None: omfs_jax.make_omfs_pass(pass_depth))
+for _name, _factory in policies_jax.JAX_BASELINES.items():
+    register_policy(_name, ALL_BASELINES[_name], _factory)
+
+
+def _resolve_python(policy: Union[str, PythonPolicy]) -> PythonPolicy:
+    if callable(policy):
+        return policy
+    if policy not in POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    return POLICIES[policy].python_pass
+
+
+# ---------------------------------------------------------------------------
+# The tick kernel — Python backend
+# ---------------------------------------------------------------------------
+
+
+def tick_python(
+    state: ClusterState,
+    policy: PythonPolicy,
+    *,
+    work_fn: Optional[Callable[[Job], None]] = None,
+    on_complete: Optional[Callable[[Job], None]] = None,
+) -> Tuple[List[Decision], List[Tuple[Job, JobState, JobState]]]:
+    """One tick at ``state.time``: arrivals -> progress -> policy pass.
+
+    ``work_fn(job)`` is called for each running job before its progress
+    accrues (the executor runs real optimizer steps here); ``on_complete``
+    fires when a job finishes.  Returns the pass's decisions plus the state
+    transitions it caused, ``[(job, was, now), ...]``, so adapters can react
+    (checkpoint on eviction, restore on restart) without re-deriving them.
+    """
+    t = state.time
+    # 1. arrivals
+    for j in state.jobs.values():
+        if j.state == JobState.UNSUBMITTED and j.submit_time <= t:
+            j.state = JobState.PENDING
+    # 2. progress + completions (jobs that ran during the previous tick)
+    for j in state.running_jobs():
+        if work_fn is not None:
+            work_fn(j)
+        j.progress += 1
+        if j.progress >= j.work + j.overhead:
+            j.state = JobState.DONE
+            j.finish_time = t
+            if on_complete is not None:
+                on_complete(j)
+    # 3. scheduling pass, with transition capture
+    pre = {jid: j.state for jid, j in state.jobs.items()}
+    decisions = policy(state)
+    transitions = [
+        (j, pre[jid], j.state)
+        for jid, j in state.jobs.items() if j.state != pre[jid]
+    ]
+    return decisions, transitions
+
+
+# ---------------------------------------------------------------------------
+# The tick kernel — JAX backend (same four steps over the JobTable)
+# ---------------------------------------------------------------------------
+
+
+def tick_jax(cfg: SchedulerConfig, ent: jax.Array, tbl: "omfs_jax.JobTable",
+             t: jax.Array, policy_pass: JaxPass) -> "omfs_jax.JobTable":
+    # 1. arrivals
+    arrived = (tbl.state == omfs_jax.UNSUB) & (tbl.submit <= t)
+    tbl = tbl._replace(state=jnp.where(arrived, omfs_jax.PENDING, tbl.state))
+    # 2. progress + completions
+    running = tbl.state == omfs_jax.RUNNING
+    progress = tbl.progress + running.astype(jnp.int32)
+    done = running & (progress >= tbl.work + tbl.overhead)
+    tbl = tbl._replace(
+        progress=progress,
+        state=jnp.where(done, omfs_jax.DONE, tbl.state),
+        finish=jnp.where(done, t, tbl.finish),
+    )
+    # 3. scheduling pass over the submitted queue snapshot
+    return policy_pass(cfg, ent, t, tbl)
+
+
+@functools.lru_cache(maxsize=128)
+def _jitted_runner(cfg: SchedulerConfig, pass_fn: JaxPass, horizon: int):
+    """One jitted scan per (cfg, pass, horizon): repeated `simulate` calls
+    reuse the compilation (pass factories are memoized for the same reason —
+    a fresh closure per call would defeat every warmup)."""
+
+    @jax.jit
+    def run(tbl, ent):
+        def step(tbl, t):
+            tbl = tick_jax(cfg, ent, tbl, t, pass_fn)
+            busy = jnp.sum(jnp.where(tbl.state == omfs_jax.RUNNING,
+                                     tbl.cpus, 0))
+            return tbl, busy
+
+        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
+
+    return run
+
+
+def run_jax(users: List[User], jobs: List[Job], cfg: SchedulerConfig,
+            horizon: int, pass_fn: JaxPass
+            ) -> Tuple["omfs_jax.JobTable", jax.Array]:
+    """Scan the jitted tick kernel over ``horizon`` ticks.
+
+    Returns (final JobTable, busy[t] series); step 4 of the protocol is the
+    per-tick busy reduction carried out of the scan."""
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total)
+    if tbl.cpus.shape[0] == 0:
+        # passes index order[0]/cumsum[-1]; match the python backend instead
+        return tbl, jnp.zeros((horizon,), jnp.int32)
+    return _jitted_runner(cfg, pass_fn, horizon)(tbl, ent)
+
+
+# ---------------------------------------------------------------------------
+# Results (TickLog/SimResult live here; core.simulator re-exports them)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TickLog:
+    time: int
+    busy: int
+    pending: int
+    running: int
+    per_user_cpus: Dict[str, int]
+    decisions: List[Decision]
+
+
+@dataclass
+class SimResult:
+    state: ClusterState
+    log: List[TickLog]
+
+    # -- headline metrics (see core.metrics for derived scores) ------------
+    def utilization(self) -> float:
+        cfg = self.state.config
+        if not self.log:
+            return 0.0
+        return float(np.mean([t.busy for t in self.log]) / cfg.cpu_total)
+
+    def job_table(self) -> List[Job]:
+        return sorted(self.state.jobs.values(), key=lambda j: j.id)
+
+    def schedule_signature(self):
+        """Hashable summary used by the Python-vs-JAX equivalence tests."""
+        return tuple(
+            (j.id, int(j.state), j.first_start, j.finish_time, j.progress,
+             j.n_preemptions, j.n_checkpoints)
+            for j in self.job_table()
+        )
+
+
+@dataclass
+class EngineResult:
+    """Backend-agnostic simulation outcome from `simulate`."""
+
+    policy: str
+    backend: str
+    config: SchedulerConfig
+    sim: Optional[SimResult] = None                    # python backend
+    table: Optional["omfs_jax.JobTable"] = None        # jax backend
+    busy: Optional[np.ndarray] = None                  # busy[t], both backends
+
+    def busy_series(self) -> np.ndarray:
+        return np.asarray(self.busy)
+
+    def utilization(self) -> float:
+        b = self.busy_series()
+        return float(b.mean() / self.config.cpu_total) if b.size else 0.0
+
+    def signature(self):
+        """Id-free schedule signature, identical across backends when the
+        policy's two implementations are step-equivalent."""
+        if self.sim is not None:
+            return tuple(s[1:] for s in self.sim.schedule_signature())
+        return tuple(s[1:] for s in omfs_jax.signature_from_table(self.table))
+
+    def summary(self) -> Dict[str, float]:
+        """One comparison-table row: utilization / wait / preemption counts."""
+        if self.sim is not None:
+            jobs = self.sim.job_table()
+            started = [j for j in jobs if j.first_start >= 0]
+            waits = [j.first_start - j.submit_time for j in started]
+            preempt = sum(j.n_preemptions for j in jobs)
+            ckpt = sum(j.n_checkpoints for j in jobs)
+            killed = sum(1 for j in jobs if j.state == JobState.KILLED)
+            done = sum(1 for j in jobs if j.state == JobState.DONE)
+        else:
+            t = jax.device_get(self.table)
+            started = t.first_start >= 0
+            waits = (t.first_start - t.submit)[started]
+            preempt = int(t.n_preempt.sum())
+            ckpt = int(t.n_ckpt.sum())
+            killed = int((t.state == omfs_jax.KILLED).sum())
+            done = int((t.state == omfs_jax.DONE).sum())
+        return {
+            "policy": self.policy,
+            "backend": self.backend,
+            "utilization": self.utilization(),
+            "mean_wait": float(np.mean(waits)) if len(waits) else 0.0,
+            "preemptions": preempt,
+            "checkpoints": ckpt,
+            "killed": killed,
+            "done": done,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The single entry point
+# ---------------------------------------------------------------------------
+
+
+def simulate(
+    users: List[User],
+    jobs: List[Job],
+    config: SchedulerConfig,
+    horizon: int,
+    policy: Union[str, PythonPolicy] = "omfs",
+    backend: str = "python",
+    *,
+    pass_depth: Optional[int] = None,
+) -> EngineResult:
+    """Run ``policy`` on ``backend`` over the same tick protocol.
+
+    ``policy`` is a registry name (see POLICIES) — or, on the python backend
+    only, any ``ClusterState -> List[Decision]`` callable.  ``pass_depth``
+    bounds the per-tick queue sweep on the jax backend (SLURM's
+    sched_max_job_start); None sweeps the whole queue.
+    """
+    name = policy if isinstance(policy, str) else getattr(
+        policy, "__name__", "custom")
+
+    if backend == "python":
+        pol = _resolve_python(policy)
+        state = ClusterState(config=config, users={u.name: u for u in users})
+        for j in sorted(jobs, key=lambda x: x.id):
+            j = j.clone()
+            j.state = JobState.UNSUBMITTED
+            state.jobs[j.id] = j
+        log: List[TickLog] = []
+        for t in range(horizon):
+            state.time = t
+            decisions, _ = tick_python(state, pol)
+            # 4. metrics
+            per_user = {u: 0 for u in state.users}
+            for j in state.running_jobs():
+                per_user[j.user] += j.cpus
+            log.append(TickLog(
+                time=t, busy=state.cpu_busy(),
+                pending=len(state.pending_jobs()),
+                running=len(state.running_jobs()),
+                per_user_cpus=per_user, decisions=decisions,
+            ))
+        sim = SimResult(state=state, log=log)
+        return EngineResult(
+            policy=name, backend=backend, config=config, sim=sim,
+            busy=np.asarray([tl.busy for tl in log]))
+
+    if backend == "jax":
+        if not isinstance(policy, str):
+            raise ValueError(
+                "jax backend needs a registered policy name, got a callable; "
+                f"known: {sorted(POLICIES)}")
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+        pass_fn = POLICIES[policy].jax_factory(pass_depth)
+        tbl, busy = run_jax(users, jobs, config, horizon, pass_fn)
+        return EngineResult(
+            policy=name, backend=backend, config=config, table=tbl,
+            busy=np.asarray(busy))
+
+    raise ValueError(f"unknown backend {backend!r}; use 'python' or 'jax'")

@@ -1,37 +1,45 @@
 """OMFS vectorized in JAX: the paper's contribution as a composable module.
 
-The whole scheduler state is a table of fixed-size arrays (`JobTable`); one
-simulation tick — arrivals, progress/completions, and a full Algorithm-1
-scheduling pass — is a single jitted function built from ``jax.lax`` control
-flow (``fori_loop`` over the submitted queue, ``lexsort``+``cumsum`` victim
-selection replacing the paper's while-loop, lines 32-36).  A fleet
-simulation is ``lax.scan`` over ticks.
+The whole scheduler state is a table of fixed-size arrays (`JobTable`); the
+tick protocol (arrivals -> progress/completions -> scheduling pass) is defined
+once in `core.engine` and shared by every policy and backend.  This module
+owns the table representation, the JobTable *primitives* every vectorized
+policy builds on (queue ordering, admission, victim selection/eviction), and
+the two OMFS passes:
 
-This is what makes 1000+-node / 100k-job what-if simulation cheap (see
-benchmarks/bench_sched_scale.py) — and it is property-tested to produce
-*identical schedules* to the Python reference (`core.omfs`) on randomized
-workloads (tests/test_omfs_equivalence.py).
+* ``make_omfs_pass(incremental=False)`` — the original reference pass: each
+  admission recomputes O(J) masked usage sums and a fresh ``lexsort`` for
+  victim selection, faithful but O(J log J) per queue position.
+* ``make_omfs_pass(incremental=True)`` — the optimized pass (the default):
+  per-user usage ``[U]`` and the busy scalar ride the ``fori_loop`` carry and
+  are updated in O(1) per admission; the idle-admit fast path touches no
+  victim machinery at all, and the ``lexsort``+``cumsum`` victim selection
+  runs only on the eviction branch of a ``lax.cond``.
+
+Both produce bit-identical schedules (tests/test_policies_equivalence.py and
+benchmarks/bench_sched_scale.py assert signature equality) — this is what
+makes 1000+-node / 100k-job what-if simulation cheap.
 
 Sequential admission is inherent to Algorithm 1 (each admission changes the
 state the next decision sees), so the pass is a ``fori_loop`` over queue
-positions, each O(J) vectorized — O(J^2) per tick worst case; the
-``pass_depth`` knob (same as SLURM's sched_max_job_start) bounds it at scale.
+positions; the ``pass_depth`` knob (same as SLURM's sched_max_job_start)
+bounds it at scale.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.types import ClusterState, Job, JobClass, JobState, SchedulerConfig, User
+from repro.core.types import JobClass, SchedulerConfig
 
 # JobState encoding (matches types.JobState)
 UNSUB, PENDING, RUNNING, DONE, KILLED = 0, 1, 2, 3, 4
 BIG = jnp.int32(2**30)
+NONP = int(JobClass.NON_PREEMPTIBLE)
+CKPT = int(JobClass.CHECKPOINTABLE)
 
 
 class JobTable(NamedTuple):
@@ -52,10 +60,14 @@ class JobTable(NamedTuple):
     n_preempt: jax.Array
     n_ckpt: jax.Array
     overhead: jax.Array
+    backfilled: jax.Array  # int32 0/1: ever admitted by queue-jumping
 
 
-def table_from_jobs(jobs, users) -> Tuple[JobTable, jnp.ndarray]:
-    """Build (JobTable, entitled_cpus[U]) from core.types objects."""
+def table_from_jobs(jobs, users, cpu_total: int) -> Tuple[JobTable, jax.Array]:
+    """Build ``(JobTable, entitled_cpus[U])`` from core.types objects.
+
+    Rows are ordered by job id, matching the Python backend's job table, so
+    per-row signatures are directly comparable across backends."""
     uidx = {u.name: i for i, u in enumerate(users)}
     j = sorted(jobs, key=lambda x: x.id)
     n = len(j)
@@ -75,8 +87,9 @@ def table_from_jobs(jobs, users) -> Tuple[JobTable, jnp.ndarray]:
         n_preempt=jnp.zeros((n,), jnp.int32),
         n_ckpt=jnp.zeros((n,), jnp.int32),
         overhead=jnp.zeros((n,), jnp.int32),
+        backfilled=arr(lambda x: int(x.backfilled)),
     )
-    return table
+    return table, entitlements(users, cpu_total)
 
 
 def entitlements(users, cpu_total: int) -> jnp.ndarray:
@@ -84,16 +97,99 @@ def entitlements(users, cpu_total: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# One Algorithm-1 admission decision + its state update, vectorized
+# JobTable primitives shared by every vectorized policy (OMFS + baselines)
+# ---------------------------------------------------------------------------
+
+
+def queue_order(tbl: JobTable) -> Tuple[jax.Array, jax.Array]:
+    """Snapshot the submitted queue: (order[J], eligible[J]).
+
+    Order is (-priority, submit, id) — the same key as queues.submitted_key —
+    with ineligible rows pushed to the end."""
+    n = tbl.cpus.shape[0]
+    eligible = tbl.state == PENDING
+    qkey = jnp.where(eligible, -tbl.priority, BIG)
+    order = jnp.lexsort((jnp.arange(n), tbl.submit, qkey))
+    return order, eligible
+
+
+def running_usage(tbl: JobTable, num_users: int):
+    """Aggregates at pass start: (usage[U], non_preemptible_usage[U], busy)."""
+    running = tbl.state == RUNNING
+    run_cpus = jnp.where(running, tbl.cpus, 0)
+    usage = jax.ops.segment_sum(run_cpus, tbl.user, num_segments=num_users)
+    nonp = jax.ops.segment_sum(
+        jnp.where(running & (tbl.jclass == NONP), tbl.cpus, 0),
+        tbl.user, num_segments=num_users)
+    return usage, nonp, jnp.sum(run_cpus)
+
+
+def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
+              admit: jax.Array) -> JobTable:
+    """Start job ``idx`` (lines 37-38) iff ``admit``; O(1) scatter updates."""
+    return tbl._replace(
+        state=tbl.state.at[idx].set(
+            jnp.where(admit, RUNNING, tbl.state[idx])),
+        run_start=tbl.run_start.at[idx].set(
+            jnp.where(admit, t, tbl.run_start[idx])),
+        first_start=tbl.first_start.at[idx].set(
+            jnp.where(admit & (tbl.first_start[idx] < 0), t,
+                      tbl.first_start[idx])),
+    )
+
+
+def select_victims(tbl: JobTable, evictable: jax.Array, idle: jax.Array,
+                   cpus_needed: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """The paper's while-loop (lines 32-36) as lexsort+cumsum: the minimal
+    prefix of evictable jobs — ordered (priority asc, run_start asc, id asc),
+    queues.running_victim_key — whose release makes ``cpus_needed`` fit.
+
+    Returns (planned[J] victim mask, enough: idle + all evictable suffices)."""
+    n = tbl.cpus.shape[0]
+    order = jnp.lexsort((jnp.arange(n), tbl.run_start, tbl.priority))
+    evict_sorted = evictable[order]
+    cpus_sorted = jnp.where(evict_sorted, tbl.cpus[order], 0)
+    freed_cum = jnp.cumsum(cpus_sorted)
+    need = jnp.maximum(cpus_needed - idle, 0)
+    prefix_needed = freed_cum - cpus_sorted < need   # victim still required
+    planned_sorted = evict_sorted & prefix_needed
+    enough = idle + freed_cum[-1] >= cpus_needed
+    planned = jnp.zeros_like(evictable).at[order].set(planned_sorted)
+    return planned, enough
+
+
+def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
+                    planned: jax.Array) -> JobTable:
+    """Lines 33-36 for every planned victim: checkpoint (or drop) and free."""
+    is_ckpt = tbl.jclass == CKPT
+    kill = planned & ~is_ckpt
+    ckpt = planned & is_ckpt
+    return tbl._replace(
+        state=jnp.where(
+            ckpt, PENDING,
+            jnp.where(kill, (KILLED if cfg.drop_killed else PENDING),
+                      tbl.state)),
+        progress=jnp.where(kill & (not cfg.drop_killed), 0, tbl.progress),
+        overhead=tbl.overhead + jnp.where(ckpt, cfg.cr_overhead, 0),
+        run_start=jnp.where(planned, -1, tbl.run_start),
+        finish=jnp.where(kill & cfg.drop_killed, t, tbl.finish),
+        n_preempt=tbl.n_preempt + planned.astype(jnp.int32),
+        n_ckpt=tbl.n_ckpt + ckpt.astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference pass: one Algorithm-1 admission, everything recomputed (O(J))
 # ---------------------------------------------------------------------------
 
 
 def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
                tbl: JobTable, idx: jax.Array, eligible: jax.Array) -> JobTable:
     """Process job ``idx`` (runner, lines 18-38); no-op unless eligible and
-    still pending."""
+    still pending.  Kept as the un-optimized reference the incremental pass
+    is benchmarked and property-tested against."""
     running = tbl.state == RUNNING
-    preempt_able = tbl.jclass != int(JobClass.NON_PREEMPTIBLE)
+    preempt_able = tbl.jclass != NONP
 
     ju = tbl.user[idx]
     jc = tbl.cpus[idx]
@@ -104,7 +200,7 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
     idle = cfg.cpu_total - busy
     entitled = ent[ju]
 
-    job_non_p = tbl.jclass[idx] == int(JobClass.NON_PREEMPTIBLE)
+    job_non_p = tbl.jclass[idx] == NONP
     # line 23 (note >=): non-preemptible beyond (or exactly at) entitlement
     reject_23 = job_non_p & (non_p_usage + jc >= entitled)
     # line 26 (note >): enough idle -> run anyways
@@ -122,106 +218,131 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
         over = usage_per_user[tbl.user] > ent[tbl.user]
         evictable = evictable & over
 
-    # victim order: (priority asc, run_start asc, id asc)  [queues.py]
-    order = jnp.lexsort((jnp.arange(tbl.cpus.shape[0]), tbl.run_start, tbl.priority))
-    evict_sorted = evictable[order]
-    cpus_sorted = jnp.where(evict_sorted, tbl.cpus[order], 0)
-    freed_cum = jnp.cumsum(cpus_sorted)
-    # minimal prefix with idle + freed >= jc  (the paper's while loop)
-    need = jnp.maximum(jc - idle, 0)
-    prefix_needed = freed_cum - cpus_sorted < need   # victim still required
-    planned_sorted = evict_sorted & prefix_needed
-    enough = idle + freed_cum[-1] >= jc
+    planned, enough = select_victims(tbl, evictable, idle, jc)
 
     admit_evict = (~reject_23) & (~admit_26) & (~reject_28) & enough
     admit = eligible & (tbl.state[idx] == PENDING) & (~reject_23) & (
         admit_26 | admit_evict)
     do_evict = admit & (~admit_26)
+    planned = planned & do_evict
 
-    # scatter planned victims back to table order
-    planned = jnp.zeros_like(evictable).at[order].set(planned_sorted) & do_evict
-
-    is_ckpt = tbl.jclass == int(JobClass.CHECKPOINTABLE)
-    kill = planned & ~is_ckpt
-    ckpt = planned & is_ckpt
-
-    new_state = jnp.where(
-        ckpt, PENDING,
-        jnp.where(kill, (KILLED if cfg.drop_killed else PENDING), tbl.state))
-    new_progress = jnp.where(kill & (not cfg.drop_killed), 0, tbl.progress)
-    new_overhead = tbl.overhead + jnp.where(ckpt, cfg.cr_overhead, 0)
-    new_run_start = jnp.where(planned, -1, tbl.run_start)
-    new_finish = jnp.where(kill & cfg.drop_killed, t, tbl.finish)
-    new_n_preempt = tbl.n_preempt + planned.astype(jnp.int32)
-    new_n_ckpt = tbl.n_ckpt + ckpt.astype(jnp.int32)
-
-    # admit the job itself (lines 37-38)
-    new_state = new_state.at[idx].set(jnp.where(admit, RUNNING, new_state[idx]))
-    new_run_start = new_run_start.at[idx].set(jnp.where(admit, t, new_run_start[idx]))
-    new_first = tbl.first_start.at[idx].set(
-        jnp.where(admit & (tbl.first_start[idx] < 0), t, tbl.first_start[idx]))
-
-    return tbl._replace(
-        state=new_state, progress=new_progress, overhead=new_overhead,
-        run_start=new_run_start, finish=new_finish,
-        n_preempt=new_n_preempt, n_ckpt=new_n_ckpt, first_start=new_first,
-    )
+    tbl = apply_evictions(cfg, t, tbl, planned)
+    return admit_job(tbl, idx, t, admit)
 
 
 # ---------------------------------------------------------------------------
-# One tick: arrivals -> progress -> scheduling pass
+# The OMFS scheduling pass (policy contract: pass_fn(cfg, ent, t, tbl) -> tbl)
+# ---------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True):
+    """Build the Algorithm-1 scheduling pass for `core.engine`.
+    Memoized so repeated `engine.simulate` calls reuse the jitted scan.
+
+    ``incremental=True`` threads (usage[U], non_preemptible_usage[U], busy)
+    through the fori_loop carry — O(1) per admission decision on the
+    idle-admit fast path and on every rejection — and defers the victim
+    lexsort+cumsum to a ``lax.cond`` branch taken only when eviction is
+    actually needed.  ``incremental=False`` is the original reference pass.
+    """
+
+    def pass_fn(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
+                tbl: JobTable) -> JobTable:
+        n = tbl.cpus.shape[0]
+        order, eligible = queue_order(tbl)
+        depth = n if pass_depth is None else min(pass_depth, n)
+
+        if not incremental:
+            def body_ref(i, tbl):
+                idx = order[i]
+                return _try_admit(cfg, ent, t, tbl, idx, eligible[idx])
+            return jax.lax.fori_loop(0, depth, body_ref, tbl)
+
+        usage0, nonp0, busy0 = running_usage(tbl, ent.shape[0])
+
+        def body(i, carry):
+            tbl, usage, nonp_usage, busy = carry
+            idx = order[i]
+            ju = tbl.user[idx]
+            jc = tbl.cpus[idx]
+            pending_now = eligible[idx] & (tbl.state[idx] == PENDING)
+            job_non_p = tbl.jclass[idx] == NONP
+            idle = cfg.cpu_total - busy
+            # lines 23 / 26 / 28 from the carried aggregates — O(1)
+            reject_23 = job_non_p & (nonp_usage[ju] + jc >= ent[ju])
+            admit_26 = idle > jc
+            reject_28 = jc > ent[ju] - usage[ju]
+            ok = pending_now & ~reject_23
+            fast_admit = ok & admit_26
+            need_evict = ok & ~admit_26 & ~reject_28
+
+            def evict_case(carry):
+                tbl, usage, nonp_usage, busy = carry
+                running = tbl.state == RUNNING
+                preempt_able = tbl.jclass != NONP
+                evictable = running & preempt_able & (
+                    (t - tbl.run_start) >= cfg.quantum)
+                if cfg.avoid_self_eviction:            # beyond-paper flag
+                    evictable = evictable & (tbl.user != ju)
+                if cfg.victim_filter_over_entitlement:  # beyond-paper flag
+                    evictable = evictable & (usage[tbl.user] > ent[tbl.user])
+                planned, enough = select_victims(tbl, evictable, idle, jc)
+                admit = enough
+                planned = planned & admit
+                freed = jnp.where(planned, tbl.cpus, 0)
+                tbl = apply_evictions(cfg, t, tbl, planned)
+                usage = usage - jax.ops.segment_sum(
+                    freed, tbl.user, num_segments=ent.shape[0])
+                busy = busy - jnp.sum(freed)
+                tbl = admit_job(tbl, idx, t, admit)
+                grant = jnp.where(admit, jc, 0)
+                usage = usage.at[ju].add(grant)
+                nonp_usage = nonp_usage.at[ju].add(
+                    jnp.where(job_non_p, grant, 0))
+                busy = busy + grant
+                return tbl, usage, nonp_usage, busy
+
+            tbl, usage, nonp_usage, busy = jax.lax.cond(
+                need_evict, evict_case, lambda c: c,
+                (tbl, usage, nonp_usage, busy))
+
+            # idle-admit fast path: no victim machinery, O(1) updates
+            tbl = admit_job(tbl, idx, t, fast_admit)
+            grant = jnp.where(fast_admit, jc, 0)
+            usage = usage.at[ju].add(grant)
+            nonp_usage = nonp_usage.at[ju].add(jnp.where(job_non_p, grant, 0))
+            busy = busy + grant
+            return tbl, usage, nonp_usage, busy
+
+        tbl, _, _, _ = jax.lax.fori_loop(
+            0, depth, body, (tbl, usage0, nonp0, busy0))
+        return tbl
+
+    return pass_fn
+
+
+# ---------------------------------------------------------------------------
+# Thin adapters over core.engine (kept for API compatibility)
 # ---------------------------------------------------------------------------
 
 
 @partial(jax.jit, static_argnames=("cfg", "pass_depth"))
 def omfs_tick(cfg: SchedulerConfig, ent: jax.Array, tbl: JobTable, t: jax.Array,
               pass_depth: Optional[int] = None) -> JobTable:
-    n = tbl.cpus.shape[0]
-    # 1. arrivals
-    arrived = (tbl.state == UNSUB) & (tbl.submit <= t)
-    tbl = tbl._replace(state=jnp.where(arrived, PENDING, tbl.state))
-    # 2. progress + completions
-    running = tbl.state == RUNNING
-    progress = tbl.progress + running.astype(jnp.int32)
-    done = running & (progress >= tbl.work + tbl.overhead)
-    tbl = tbl._replace(
-        progress=progress,
-        state=jnp.where(done, DONE, tbl.state),
-        finish=jnp.where(done, t, tbl.finish),
-    )
-    # 3. scheduling pass over the submitted queue snapshot
-    eligible_mask = tbl.state == PENDING
-    # queue order: (-priority, submit, id); ineligible jobs pushed to the end
-    qkey = jnp.where(eligible_mask, -tbl.priority, BIG)
-    order = jnp.lexsort((jnp.arange(n), tbl.submit, qkey))
-    depth = n if pass_depth is None else min(pass_depth, n)
-
-    def body(i, tbl):
-        idx = order[i]
-        return _try_admit(cfg, ent, t, tbl, idx, eligible_mask[idx])
-
-    tbl = jax.lax.fori_loop(0, depth, body, tbl)
-    return tbl
+    """One engine tick with the (incremental) OMFS pass."""
+    from repro.core import engine
+    return engine.tick_jax(cfg, ent, tbl, t, make_omfs_pass(pass_depth))
 
 
 def simulate_jax(
     users, jobs, cfg: SchedulerConfig, horizon: int,
-    pass_depth: Optional[int] = None,
+    pass_depth: Optional[int] = None, incremental: bool = True,
 ) -> Tuple[JobTable, jax.Array]:
     """Run the full fleet simulation; returns (final table, busy[t] series)."""
-    tbl = table_from_jobs(jobs, users)
-    ent = entitlements(users, cfg.cpu_total)
-
-    @jax.jit
-    def run(tbl):
-        def step(tbl, t):
-            tbl = omfs_tick(cfg, ent, tbl, t, pass_depth)
-            busy = jnp.sum(jnp.where(tbl.state == RUNNING, tbl.cpus, 0))
-            return tbl, busy
-
-        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
-
-    return run(tbl)
+    from repro.core import engine
+    return engine.run_jax(users, jobs, cfg, horizon,
+                          make_omfs_pass(pass_depth, incremental))
 
 
 def signature_from_table(tbl: JobTable):
@@ -232,3 +353,12 @@ def signature_from_table(tbl: JobTable):
          int(t.progress[i]), int(t.n_preempt[i]), int(t.n_ckpt[i]))
         for i in range(t.state.shape[0])
     )
+
+
+def tables_equal(a: JobTable, b: JobTable) -> bool:
+    """Fast whole-table schedule equality (the fields of the signature)."""
+    import numpy as np
+    fields = ("state", "first_start", "finish", "progress", "n_preempt",
+              "n_ckpt")
+    a, b = jax.device_get(a), jax.device_get(b)
+    return all(np.array_equal(getattr(a, f), getattr(b, f)) for f in fields)

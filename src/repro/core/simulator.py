@@ -1,61 +1,25 @@
-"""Tick-based cluster simulator driving any scheduling policy.
+"""Tick-based cluster simulator — thin adapter over `core.engine`.
 
-Each tick:
-  1. arrivals   — jobs with ``submit_time == t`` become PENDING,
-  2. progress   — every running job accrues one work unit; completed jobs
-                  free their CPUs,
-  3. scheduling — one policy pass over the pending queue,
-  4. metrics    — per-tick accounting (busy CPUs, per-user usage).
+The tick protocol (arrivals -> progress/completions -> policy pass ->
+metrics) lives in `core.engine.tick_python`; this module keeps the
+historical ``simulate(...) -> SimResult`` entry point and re-exports
+`SimResult`/`TickLog` for existing imports (e.g. `core.metrics`).
 
-Tick-based (rather than event-driven) on purpose: the JAX fleet simulator
-(`core.omfs_jax`) implements the *same* per-tick semantics with vectorized
-ops, and property tests assert the two produce identical schedules.
+Tick-based (rather than event-driven) on purpose: the JAX fleet backend
+(`core.engine.tick_jax` + `core.omfs_jax`) implements the *same* per-tick
+semantics with vectorized ops, and property tests assert the two produce
+identical schedules for every registered policy.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List
 
-import numpy as np
-
+from repro.core import engine
+from repro.core.engine import SimResult, TickLog  # noqa: F401  (re-exported)
 from repro.core.omfs import Decision, scheduler_pass
-from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
+from repro.core.types import ClusterState, Job, SchedulerConfig, User
 
 Policy = Callable[[ClusterState], List[Decision]]
-
-
-@dataclass
-class TickLog:
-    time: int
-    busy: int
-    pending: int
-    running: int
-    per_user_cpus: Dict[str, int]
-    decisions: List[Decision]
-
-
-@dataclass
-class SimResult:
-    state: ClusterState
-    log: List[TickLog]
-
-    # -- headline metrics (see core.metrics for derived scores) ------------
-    def utilization(self) -> float:
-        cfg = self.state.config
-        if not self.log:
-            return 0.0
-        return float(np.mean([t.busy for t in self.log]) / cfg.cpu_total)
-
-    def job_table(self) -> List[Job]:
-        return sorted(self.state.jobs.values(), key=lambda j: j.id)
-
-    def schedule_signature(self):
-        """Hashable summary used by the Python-vs-JAX equivalence tests."""
-        return tuple(
-            (j.id, int(j.state), j.first_start, j.finish_time, j.progress,
-             j.n_preemptions, j.n_checkpoints)
-            for j in self.job_table()
-        )
 
 
 def simulate(
@@ -65,34 +29,6 @@ def simulate(
     horizon: int,
     policy: Policy = scheduler_pass,
 ) -> SimResult:
-    state = ClusterState(config=config, users={u.name: u for u in users})
-    for j in jobs:
-        j = j.clone()
-        j.state = JobState.UNSUBMITTED
-        state.jobs[j.id] = j
-
-    log: List[TickLog] = []
-    for t in range(horizon):
-        state.time = t
-        # 1. arrivals
-        for j in state.jobs.values():
-            if j.state == JobState.UNSUBMITTED and j.submit_time <= t:
-                j.state = JobState.PENDING
-        # 2. progress + completions (jobs that ran during the previous tick)
-        for j in state.running_jobs():
-            j.progress += 1
-            if j.progress >= j.work + j.overhead:
-                j.state = JobState.DONE
-                j.finish_time = t
-        # 3. scheduling
-        decisions = policy(state)
-        # 4. metrics
-        per_user = {u: 0 for u in state.users}
-        for j in state.running_jobs():
-            per_user[j.user] += j.cpus
-        log.append(TickLog(
-            time=t, busy=state.cpu_busy(), pending=len(state.pending_jobs()),
-            running=len(state.running_jobs()), per_user_cpus=per_user,
-            decisions=decisions,
-        ))
-    return SimResult(state=state, log=log)
+    res = engine.simulate(users, jobs, config, horizon,
+                          policy=policy, backend="python")
+    return res.sim

@@ -69,6 +69,7 @@ class Job:
     n_preemptions: int = 0
     n_checkpoints: int = 0
     overhead: int = 0              # extra work units added by C/R cost
+    backfilled: bool = False       # admitted by jumping the queue (backfill)
 
     @property
     def remaining(self) -> int:

@@ -1,34 +1,34 @@
-"""Cluster-simulation launcher: OMFS (or a baseline) on a synthetic fleet.
+"""Cluster-simulation launcher: any registered policy on a synthetic fleet,
+on either engine backend.
 
   PYTHONPATH=src python -m repro.launch.cluster_sim --policy omfs \
-      --chips 1024 --tenants 6 --horizon 800 --jax
+      --chips 1024 --tenants 6 --horizon 800 --backend jax
 """
 import argparse
 
-import numpy as np
-
-from repro.core import omfs_jax
-from repro.core.baselines import ALL_BASELINES
+from repro.core import engine
 from repro.core.metrics import compute_metrics
-from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="omfs",
-                    choices=["omfs"] + list(ALL_BASELINES))
+    ap.add_argument("--policy", default="omfs", choices=sorted(engine.POLICIES))
+    ap.add_argument("--backend", default="python", choices=["python", "jax"])
+    ap.add_argument("--jax", action="store_true",
+                    help="shorthand for --backend jax")
     ap.add_argument("--chips", type=int, default=1024)
     ap.add_argument("--tenants", type=int, default=6)
     ap.add_argument("--horizon", type=int, default=800)
     ap.add_argument("--quantum", type=int, default=20)
     ap.add_argument("--cr-overhead", type=int, default=2)
+    ap.add_argument("--pass-depth", type=int, default=64,
+                    help="per-tick queue sweep bound on the jax backend")
     ap.add_argument("--arrival-rate", type=float, default=0.08)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--jax", action="store_true",
-                    help="vectorized lax simulator (omfs only)")
     args = ap.parse_args(argv)
+    backend = "jax" if args.jax else args.backend
 
     spec = WorkloadSpec(n_users=args.tenants, horizon=args.horizon,
                         cpu_total=args.chips, seed=args.seed,
@@ -38,25 +38,20 @@ def main(argv=None):
     cfg = SchedulerConfig(cpu_total=args.chips, quantum=args.quantum,
                           cr_overhead=args.cr_overhead)
     print(f"{len(jobs)} jobs, {args.tenants} tenants, {args.chips} chips, "
-          f"policy={args.policy}")
+          f"policy={args.policy}, backend={backend}")
 
-    if args.jax:
-        assert args.policy == "omfs", "JAX path implements OMFS"
-        tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, args.horizon,
-                                          pass_depth=64)
-        busy = np.asarray(busy)
-        t = np.asarray(tbl.state)
-        print(f"utilization {busy.mean()/args.chips:.3f} | done "
-              f"{(t==omfs_jax.DONE).sum()} | killed {(t==omfs_jax.KILLED).sum()} "
-              f"| checkpoints {int(np.asarray(tbl.n_ckpt).sum())}")
+    res = engine.simulate(
+        users, jobs, cfg, args.horizon, policy=args.policy, backend=backend,
+        pass_depth=args.pass_depth if backend == "jax" else None)
+
+    if backend == "jax":
+        s = res.summary()
+        print(f"utilization {s['utilization']:.3f} | wait {s['mean_wait']:.1f} "
+              f"| preemptions {s['preemptions']} | checkpoints "
+              f"{s['checkpoints']} | killed {s['killed']} | done {s['done']}")
         return
 
-    policy = ALL_BASELINES.get(args.policy)
-    if policy is None:
-        res = simulate(users, jobs, cfg, args.horizon)
-    else:
-        res = simulate(users, jobs, cfg, args.horizon, policy=policy)
-    m = compute_metrics(res)
+    m = compute_metrics(res.sim)
     print(f"utilization {m.utilization:.3f} | jain {m.jain_fairness:.3f} | "
           f"wait {m.mean_wait:.1f} | preemptions {m.preemptions} | "
           f"checkpoints {m.checkpoints} | killed {m.killed_jobs}")

@@ -1,0 +1,132 @@
+"""Minimal deterministic stand-in for `hypothesis` when it isn't installed.
+
+The real dependency is declared in pyproject.toml (``pip install -e
+.[test]``); this stub only exists so the suite still *collects and runs*
+in environments where installing is impossible.  It covers exactly the
+surface this repo's tests use — ``given`` (keyword strategies only),
+``settings(max_examples=..., deadline=...)``, and the ``integers`` /
+``booleans`` / ``sampled_from`` / ``floats`` / ``tuples`` / ``lists``
+strategies — drawing a fixed, seeded set of examples per test (no
+shrinking, no database).  `tests/conftest.py` installs it into
+``sys.modules`` only when ``import hypothesis`` fails.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import ModuleType
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda r: tuple(s.example_from(r) for s in strategies))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    return _Strategy(
+        lambda r: [elements.example_from(r)
+                   for _ in range(r.randint(min_size, max_size))])
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def given(*strategy_args, **strategy_kwargs):
+    def decorate(fn):
+        # hypothesis semantics: positional strategies fill the RIGHTMOST
+        # parameters of the test function
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        strategies = dict(strategy_kwargs)
+        if strategy_args:
+            for name, strat in zip(names[len(names) - len(strategy_args):],
+                                   strategy_args):
+                strategies[name] = strat
+
+        @functools.wraps(fn)
+        def wrapper(*a, **kw):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed_base = hash(fn.__qualname__) & 0xFFFF
+            for i in range(n):
+                rng = random.Random(seed_base * 1009 + i)
+                drawn = {k: s.example_from(rng)
+                         for k, s in strategies.items()}
+                try:
+                    fn(*a, **kw, **drawn)
+                except _Unsatisfied:
+                    continue
+
+        # hide the drawn parameters from pytest's fixture resolution
+        params = [p for name, p in sig.parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+def as_modules():
+    """Build (hypothesis, hypothesis.strategies) module objects."""
+    st = ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "floats", "tuples",
+                 "lists"):
+        setattr(st, name, globals()[name])
+    hyp = ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    hyp.__stub__ = True
+    return hyp, st

@@ -57,3 +57,64 @@ def test_victims_for_block_returns_none_when_impossible():
     for i in range(4):
         alloc.place(i, 4)
     assert alloc.victims_for_block(32, [(0, 0)]) is None
+
+
+# ---------------------------------------------------------------------------
+# BuddyAllocator invariants (alloc/free round-trips, conservation, oracle)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 64)),
+                min_size=1, max_size=60))
+def test_can_place_agrees_with_place(ops):
+    """The feasibility oracle never lies: can_place(c) iff place(c) succeeds,
+    at every reachable allocator state."""
+    alloc = BuddyAllocator(256)
+    live = []
+    next_id = 0
+    for is_alloc, cpus in ops:
+        if is_alloc:
+            oracle = alloc.can_place(cpus)
+            got = alloc.place(next_id, cpus)
+            assert oracle == (got is not None)
+            if got is not None:
+                live.append(next_id)
+                next_id += 1
+        elif live:
+            alloc.release(live.pop(0))
+
+
+def test_alloc_free_roundtrip_coalesces_buddies():
+    """Releasing in any order coalesces back to the single full block."""
+    import itertools
+    sizes = [4, 8, 2, 16, 4, 2]
+    for perm in itertools.permutations(range(len(sizes))):
+        alloc = BuddyAllocator(64)
+        for jid, c in enumerate(sizes):
+            assert alloc.place(jid, c) is not None
+        for jid in perm:
+            alloc.release(jid)
+        assert alloc.free_blocks[64] == {0}
+        assert all(not offs for s, offs in alloc.free_blocks.items() if s != 64)
+        assert alloc.free_chips() == 64
+
+
+def test_free_chips_conserved_through_failures():
+    """free_chips is conserved by successful ops and untouched by failed
+    placements (no partial splits leak)."""
+    alloc = BuddyAllocator(32)
+    assert alloc.free_chips() == 32
+    assert alloc.place(0, 10) is not None          # rounds to 16
+    assert alloc.free_chips() == 16
+    assert alloc.place(1, 16) is not None
+    assert alloc.free_chips() == 0
+    before = {s: set(o) for s, o in alloc.free_blocks.items()}
+    assert alloc.place(2, 1) is None               # full: must not mutate
+    assert alloc.free_chips() == 0
+    assert {s: set(o) for s, o in alloc.free_blocks.items()} == before
+    alloc.release(0)
+    assert alloc.free_chips() == 16
+    alloc.release(1)
+    assert alloc.free_chips() == 32
+    assert alloc.free_blocks[32] == {0}

@@ -1,0 +1,131 @@
+"""Property tests: every registered policy's JAX pass is step-equivalent to
+its Python twin through the unified engine, and the incremental-aggregate
+OMFS pass is schedule-identical to the reference pass it optimizes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine, omfs_jax
+from repro.core.simulator import simulate
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+POLICY_NAMES = sorted(engine.POLICIES)
+
+
+def _workload(seed, n_users, horizon=100, cpu_total=32):
+    spec = WorkloadSpec(n_users=n_users, horizon=horizon, cpu_total=cpu_total,
+                        seed=seed, arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:35]
+    return users, jobs
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.integers(0, 15),
+       n_users=st.integers(2, 4))
+def test_policy_python_jax_equivalence(policy, seed, quantum, n_users):
+    users, jobs = _workload(seed, n_users)
+    if not jobs:
+        return
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=2)
+    py = engine.simulate(users, jobs, cfg, 100,
+                         policy=policy, backend="python")
+    jx = engine.simulate(users, jobs, cfg, 100, policy=policy, backend="jax")
+    assert py.signature() == jx.signature()
+    assert (py.busy_series() == jx.busy_series()).all()
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("drop_killed", [True, False])
+def test_policy_equivalence_kill_policies(policy, drop_killed):
+    users, jobs = _workload(seed=7, n_users=3, horizon=120)
+    cfg = SchedulerConfig(cpu_total=32, quantum=5, drop_killed=drop_killed)
+    py = engine.simulate(users, jobs, cfg, 120,
+                         policy=policy, backend="python")
+    jx = engine.simulate(users, jobs, cfg, 120, policy=policy, backend="jax")
+    assert py.signature() == jx.signature()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.integers(0, 15),
+       cr=st.integers(0, 5))
+def test_omfs_incremental_matches_reference(seed, quantum, cr):
+    """The incremental-aggregate rewrite changes no schedule: bit-identical
+    signature_from_table vs the reference O(J)-per-admission pass."""
+    users, jobs = _workload(seed, n_users=3)
+    if not jobs:
+        return
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=cr)
+    tbl_ref, busy_ref = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                              incremental=False)
+    tbl_inc, busy_inc = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                              incremental=True)
+    assert omfs_jax.signature_from_table(tbl_ref) == \
+        omfs_jax.signature_from_table(tbl_inc)
+    assert (np.asarray(busy_ref) == np.asarray(busy_inc)).all()
+
+
+@pytest.mark.parametrize("pass_depth", [4, 16, None])
+def test_omfs_incremental_matches_reference_bounded_pass(pass_depth):
+    users, jobs = _workload(seed=5, n_users=4, horizon=80, cpu_total=64)
+    cfg = SchedulerConfig(cpu_total=64, quantum=4)
+    tbl_ref, _ = omfs_jax.simulate_jax(users, jobs, cfg, 80, pass_depth,
+                                       incremental=False)
+    tbl_inc, _ = omfs_jax.simulate_jax(users, jobs, cfg, 80, pass_depth,
+                                       incremental=True)
+    assert omfs_jax.tables_equal(tbl_ref, tbl_inc)
+
+
+def test_omfs_incremental_matches_reference_beyond_paper_flags():
+    users, jobs = _workload(seed=11, n_users=3)
+    cfg = SchedulerConfig(cpu_total=32, quantum=5,
+                          victim_filter_over_entitlement=True,
+                          avoid_self_eviction=True)
+    tbl_ref, _ = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                       incremental=False)
+    tbl_inc, _ = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                       incremental=True)
+    assert omfs_jax.tables_equal(tbl_ref, tbl_inc)
+
+
+def test_simulator_adapter_matches_engine():
+    """core.simulator.simulate is a thin adapter: identical SimResult
+    content to calling the engine's python backend directly."""
+    users, jobs = _workload(seed=3, n_users=3)
+    cfg = SchedulerConfig(cpu_total=32, quantum=10)
+    res = simulate(users, [j.clone() for j in jobs], cfg, 100)
+    eng = engine.simulate(users, jobs, cfg, 100,
+                          policy="omfs", backend="python")
+    assert res.schedule_signature() == eng.sim.schedule_signature()
+    assert [t.busy for t in res.log] == [t.busy for t in eng.sim.log]
+
+
+def test_engine_rejects_unknown():
+    users, jobs = _workload(seed=3, n_users=2)
+    cfg = SchedulerConfig(cpu_total=32)
+    with pytest.raises(ValueError, match="unknown policy"):
+        engine.simulate(users, jobs, cfg, 10, policy="nope", backend="jax")
+    with pytest.raises(ValueError, match="unknown policy"):
+        engine.simulate(users, jobs, cfg, 10, policy="nope", backend="python")
+    with pytest.raises(ValueError, match="unknown backend"):
+        engine.simulate(users, jobs, cfg, 10, backend="tpu-pod")
+
+
+def test_backfill_marks_and_reuses_backfilled_jobs():
+    """backfill_cr's C/R preemption only ever targets jobs that were
+    admitted by queue-jumping (Niu et al.) — on both backends."""
+    users, jobs = _workload(seed=13, n_users=4, horizon=150)
+    cfg = SchedulerConfig(cpu_total=32, quantum=3, cr_overhead=1)
+    py = engine.simulate(users, jobs, cfg, 150,
+                         policy="backfill_cr", backend="python")
+    jx = engine.simulate(users, jobs, cfg, 150, policy="backfill_cr",
+                         backend="jax")
+    assert py.signature() == jx.signature()
+    py_backfilled = {j.id for j in py.sim.job_table() if j.backfilled}
+    jx_backfilled = set(np.flatnonzero(
+        np.asarray(jx.table.backfilled) > 0).tolist())
+    ids = sorted(j.id for j in py.sim.job_table())
+    assert {ids.index(i) for i in py_backfilled} == jx_backfilled
