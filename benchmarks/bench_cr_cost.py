@@ -10,20 +10,30 @@ Tiers/codecs compared on one snapshot of a ~25M-param training job:
 Reported: bytes written and save+restore wall time (single CPU core, so the
 times are indicative; the BYTES are platform-independent and are what the
 roofline-style C/R cost model consumes).
+
+The closing section is the calibration flow (DESIGN.md §C/R cost model):
+a `CheckpointService` save/restore cycle on the same state feeds
+`CRCostModel.from_stats`, and the resulting integer model predicts the
+scheduler-tick cost of checkpointing this job — the measured thrashing
+term the simulator charges at eviction/restart.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.checkpoint import delta as delta_mod
+from repro.checkpoint.manager import ManagerConfig
 from repro.checkpoint.reshard import save_global
+from repro.checkpoint.service import CheckpointService
 from repro.checkpoint.tiers import DiskTier, MemTier
 from repro.configs import get_smoke_config
+from repro.core.crcost import state_mib_of
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
 from repro.kernels.ckpt_codec.ops import dequantize_array, quantize_array
 from repro.models.model import build_model
@@ -31,9 +41,10 @@ from repro.train.state import init_train_state
 from repro.train.steps import TrainConfig, make_train_step
 
 
-def _train_state(steps=3):
+def _train_state(steps=3, smoke=False):
     cfg = get_smoke_config("internlm2-1.8b").replace(
-        d_ff=512, n_layers=4, d_model=256, vocab=8192)
+        d_ff=256 if smoke else 512, n_layers=2 if smoke else 4,
+        d_model=128 if smoke else 256, vocab=4096 if smoke else 8192)
     model = build_model(cfg, q_chunk=64, kv_chunk=64)
     state = init_train_state(model.init(jax.random.PRNGKey(0)))
     step = jax.jit(make_train_step(model, TrainConfig()), donate_argnums=(0,))
@@ -49,7 +60,14 @@ def main() -> None:
     import tempfile
     from pathlib import Path
 
-    states = _train_state()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + fewer steps for CI")
+    ap.add_argument("--tick-seconds", type=float, default=0.1,
+                    help="wall length of one scheduler tick for calibration")
+    args = ap.parse_args()
+
+    states = _train_state(steps=2 if args.smoke else 3, smoke=args.smoke)
     prev, cur = save_global(states[-2]), save_global(states[-1])
     total_raw = sum(a.nbytes for a in cur.values())
     emit("cr_cost/state_bytes_raw", total_raw, "fp32 master + adam moments")
@@ -98,6 +116,32 @@ def main() -> None:
     t_q = time.perf_counter() - t0
     emit("cr_cost/int8_quant_bytes", q_bytes,
          f"encode_ms={t_q*1e3:.1f};ratio={q_bytes/total_raw:.3f}")
+
+    # ---- calibration: measured TierStats -> scheduler CRCostModel ---------
+    svc = CheckpointService(ManagerConfig(
+        root=tmp / "svc", durable_every=1, async_durable=False))
+    template = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), states[-1])
+    svc.save(0, states[-2])
+    svc.save(1, states[-1])
+    svc.restore(template)
+    # compress_ratio stays 1.0: the service's measured bandwidth is RAW
+    # bytes over wall time that already includes compression, i.e. an
+    # effective raw throughput — applying the delta ratio on top would
+    # discount the cost twice (see CRCostModel.from_measured)
+    model_cal = svc.calibrate(tick_seconds=args.tick_seconds)
+    mib = state_mib_of(total_raw)
+    emit("cr_cost/model_save_mib_per_tick", model_cal.save_mib_per_tick,
+         f"tick_s={args.tick_seconds}")
+    emit("cr_cost/model_restore_mib_per_tick", model_cal.restore_mib_per_tick,
+         f"tick_s={args.tick_seconds}")
+    emit("cr_cost/model_save_ticks", model_cal.save_cost(mib),
+         f"state_mib={mib};the eviction charge the simulator applies")
+    emit("cr_cost/model_restore_ticks", model_cal.restore_cost(mib),
+         f"state_mib={mib};the restart charge the simulator applies")
+    svc.close()
+
+    write_rows("cr_cost")
 
 
 if __name__ == "__main__":

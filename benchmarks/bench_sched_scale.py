@@ -17,8 +17,9 @@ import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.core import omfs_jax
+from repro.core.crcost import CRCostModel
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -77,6 +78,20 @@ def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
     emit(f"sched_scale/incremental_speedup_{n_jobs}jobs", t_ref / t_inc,
          "x vs reference pass (identical signatures)")
 
+    # size-aware C/R cost model enabled: same incremental pass, the jobs'
+    # heterogeneous state sizes now charge save/restore penalties.  The
+    # acceptance bar is <= 10% tick-throughput regression (the costs are
+    # precomputed table columns + O(1) scatters, not per-tick O(J) work).
+    cfg_cost = SchedulerConfig(
+        cpu_total=cpu_total, quantum=10,
+        cr_cost=CRCostModel(save_mib_per_tick=4096, restore_mib_per_tick=8192,
+                            save_base=1, restore_base=1))
+    _, _, t_cost = _time_jax(users, jobs, cfg_cost, horizon, pass_depth, True)
+    emit(f"sched_scale/jax_costmodel_{n_jobs}jobs_ticks_per_s",
+         horizon / t_cost,
+         f"rel_to_free={t_inc / t_cost:.3f};"
+         f"(>=0.9 keeps the cost model inside the perf budget)")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -97,6 +112,7 @@ def main() -> None:
 
     for n_jobs, cpu_total, pass_depth, horizon in cases:
         run_case(n_jobs, cpu_total, pass_depth, horizon)
+    write_rows("sched_scale")
 
 
 if __name__ == "__main__":

@@ -6,14 +6,20 @@
   immediately (the "no justified complaints" property).
 * oversubscription — a job larger than its owner's whole entitlement.
 * quantum sweep — C/R-frequency vs responsiveness trade-off (SII).
+* thrashing — the size-aware C/R cost model (core.crcost) materially
+  changing the schedule: goodput vs utilization under free / NVM-fast /
+  disk-slow tiers on the same eviction ping-pong workload.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_rows
 from repro.core import engine
 from repro.core.baselines import ALL_BASELINES
+from repro.core.crcost import CRCostModel
 from repro.core.metrics import compute_metrics
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
@@ -23,6 +29,7 @@ from repro.core.workload import (
     make_users,
     oversub_scenario,
     reclaim_scenario,
+    thrashing_scenario,
 )
 
 
@@ -96,15 +103,18 @@ def bench_quantum() -> None:
              f"wait={m.mean_wait:.1f}")
 
 
-def bench_policy_matrix() -> None:
+def bench_policy_matrix(horizon: int = 400) -> None:
     """Every registered policy on both engine backends, one comparison table:
-    utilization, mean wait, preemption/checkpoint counts (paper Table,
-    implied, now runnable at either fidelity)."""
-    spec = WorkloadSpec(n_users=4, horizon=400, cpu_total=64, seed=9,
+    utilization, goodput, wasted work, mean wait, preemption/checkpoint
+    counts (paper Table, implied, now runnable at either fidelity) — with a
+    size-aware C/R cost model charging real save/restore penalties."""
+    spec = WorkloadSpec(n_users=4, horizon=horizon, cpu_total=64, seed=9,
                         arrival_rate=0.08, mean_work=40)
     users = make_users(spec)
     jobs = make_jobs(spec, users)
-    cfg = SchedulerConfig(cpu_total=64, quantum=10, cr_overhead=2)
+    cfg = SchedulerConfig(
+        cpu_total=64, quantum=10, cr_overhead=2,
+        cr_cost=CRCostModel(save_mib_per_tick=512, restore_mib_per_tick=1024))
 
     rows = []
     for name in engine.POLICIES:
@@ -116,12 +126,13 @@ def bench_policy_matrix() -> None:
             s = res.summary()
             rows.append(s)
             emit(f"policy_matrix/{name}_{backend}_util", s["utilization"],
+                 f"goodput={s['goodput']:.3f};wasted={s['wasted_frac']:.3f};"
                  f"wait={s['mean_wait']:.1f};preempt={s['preemptions']};"
                  f"ckpt={s['checkpoints']};killed={s['killed']}")
 
-    hdr = ("policy", "backend", "utilization", "mean_wait", "preemptions",
-           "checkpoints", "killed", "done")
-    widths = [max(len(h), 16) for h in hdr]
+    hdr = ("policy", "backend", "utilization", "goodput", "wasted_frac",
+           "mean_wait", "preemptions", "checkpoints", "killed", "done")
+    widths = [max(len(h), 12) for h in hdr]
     print("\n" + "  ".join(h.ljust(w) for h, w in zip(hdr, widths)))
     for s in rows:
         print("  ".join(
@@ -129,12 +140,54 @@ def bench_policy_matrix() -> None:
             for h, w in zip(hdr, widths)))
 
 
-def main() -> None:
-    bench_utilization()
-    bench_reclaim_latency()
-    bench_oversub()
-    bench_quantum()
-    bench_policy_matrix()
+def bench_thrashing(horizon: int = 400) -> None:
+    """The cost model's headline: on the eviction ping-pong scenario a slow
+    C/R tier INCREASES utilization (the machine is busy re-writing state)
+    while goodput collapses — the paper's argument for fast NVM tiers,
+    measured."""
+    tiers = (
+        ("free", CRCostModel()),
+        ("nvm", CRCostModel(save_mib_per_tick=16384,
+                            restore_mib_per_tick=32768)),
+        ("disk", CRCostModel(save_mib_per_tick=2048,
+                             restore_mib_per_tick=4096)),
+    )
+    base = None
+    for name, model in tiers:
+        users, jobs = thrashing_scenario(64, quantum=5)
+        cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_cost=model)
+        res = simulate(users, [j.clone() for j in jobs], cfg, horizon)
+        m = compute_metrics(res)
+        emit(f"thrashing/{name}_goodput", m.goodput,
+             f"util={m.utilization:.3f};wasted={m.wasted_work_frac:.3f};"
+             f"ckpt={m.checkpoints};overhead={m.cr_overhead_units}")
+        if name == "free":
+            base = m.goodput
+    if base:
+        emit("thrashing/goodput_drop_disk_vs_free", base - m.goodput,
+             "the measured thrashing-cost term")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizons for CI (policy matrix + thrashing)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        bench_policy_matrix(horizon=120)
+        # 400 ticks so the charged overhead is actually *executed* (goodput
+        # only drops once jobs run past their base work) — still a 16-job
+        # Python sim, seconds even on CI
+        bench_thrashing(horizon=400)
+    else:
+        bench_utilization()
+        bench_reclaim_latency()
+        bench_oversub()
+        bench_quantum()
+        bench_policy_matrix()
+        bench_thrashing()
+    write_rows("scheduler")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
-"""Shared helpers for the benchmark harness: timing + CSV emission."""
+"""Shared helpers for the benchmark harness: timing + CSV/JSON emission."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List, Tuple
 
@@ -10,6 +12,17 @@ ROWS: List[Tuple[str, float, str]] = []
 def emit(name: str, value: float, derived: str = "") -> None:
     ROWS.append((name, value, derived))
     print(f"{name},{value:.6g},{derived}")
+
+
+def write_rows(bench: str, outdir: str = ".") -> str:
+    """Dump every emitted row to ``BENCH_<bench>.json`` — CI uploads these
+    as artifacts so the perf trajectory is tracked per-PR."""
+    path = os.path.join(outdir, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump([{"name": n, "value": v, "derived": d}
+                   for n, v, d in ROWS], f, indent=1)
+    print(f"wrote {path} ({len(ROWS)} rows)")
+    return path
 
 
 def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:

@@ -9,6 +9,7 @@ rebuild by XOR-ing back onto the parent chain.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
@@ -17,7 +18,7 @@ import numpy as np
 try:
     import zstandard as zstd
 except ImportError:  # pragma: no cover
-    zstd = None
+    zstd = None       # stdlib zlib below keeps deltas functional
 
 
 @dataclass
@@ -29,13 +30,15 @@ class DeltaBlob:
 
 def _compress(buf: bytes, level: int) -> bytes:
     if zstd is None:
-        return buf
+        # zstd unavailable: zlib is slower but the XOR-delta compressibility
+        # argument (mostly-zero exponent/sign bytes) holds identically
+        return zlib.compress(buf, min(max(level, 1), 9))
     return zstd.ZstdCompressor(level=level).compress(buf)
 
 
 def _decompress(buf: bytes, nbytes: int) -> bytes:
     if zstd is None:
-        return buf
+        return zlib.decompress(buf)
     return zstd.ZstdDecompressor().decompress(buf, max_output_size=nbytes)
 
 

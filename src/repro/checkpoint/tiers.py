@@ -37,6 +37,7 @@ class TierStats:
     restores: int = 0
     evictions: int = 0
     bytes_written: int = 0
+    bytes_read: int = 0
     save_seconds: float = 0.0
     restore_seconds: float = 0.0
 
@@ -58,6 +59,14 @@ class MemTier:
     def save_leaves(self, name: str, leaves: Dict[str, np.ndarray]) -> None:
         t0 = time.perf_counter()
         size = sum(a.nbytes for a in leaves.values())
+        if size > self.capacity:
+            # An admission could only succeed by evicting EVERY resident
+            # snapshot and would still blow the capacity bound; reject with
+            # the store untouched (callers write through to the durable
+            # tier instead — manager.save / TieredStore.save).
+            raise ValueError(
+                f"snapshot {name!r} ({size} B) exceeds MemTier capacity "
+                f"({self.capacity} B)")
         while self._store and (sum(self._sizes.values()) + size) > self.capacity:
             old, _ = self._store.popitem(last=False)           # LRU eviction
             self._sizes.pop(old)
@@ -74,6 +83,7 @@ class MemTier:
         leaves = self._store[name]
         self._store.move_to_end(name)
         self.stats.restores += 1
+        self.stats.bytes_read += self._sizes[name]
         self.stats.restore_seconds += time.perf_counter() - t0
         return leaves
 
@@ -123,6 +133,7 @@ class DiskTier:
         t0 = time.perf_counter()
         leaves = serialize.load_leaves(self._dir(name))
         self.stats.restores += 1
+        self.stats.bytes_read += sum(a.nbytes for a in leaves.values())
         self.stats.restore_seconds += time.perf_counter() - t0
         return leaves
 
@@ -146,9 +157,14 @@ class TieredStore:
         self.disk = disk
 
     def save(self, name: str, tree, durable: bool = False) -> None:
-        self.mem.save(name, tree)
+        leaves = {k: np.asarray(jax.device_get(v))
+                  for k, v in serialize.leaf_paths(tree)}
+        try:
+            self.mem.save_leaves(name, leaves)
+        except ValueError:
+            durable = True    # oversized for the fast tier: write through
         if durable:
-            self.disk.save_leaves(name, self.mem.restore(name))
+            self.disk.save_leaves(name, leaves)
 
     def promote(self, name: str) -> None:
         if name in self.mem and name not in self.disk:

@@ -16,10 +16,19 @@ device); scheduler accounting still runs on the job's declared `cpus`, so
 the schedule is exactly what a fleet would produce — tests assert both the
 scheduling behaviour and the bitwise-equality of preempted vs. uninterrupted
 loss curves.
+
+C/R accounting closes the loop with the simulator's cost model
+(`core.crcost`): with ``tick_seconds`` set, every real checkpoint/restore
+is timed and charged to the job's ``overhead`` in whole ticks
+(`CRCostModel.ticks_from_seconds`); the first real snapshot feeds its
+measured ``state_bytes`` back into the descriptor; and ``calibrate()``
+turns the fleet's measured `CheckpointService` traffic into a
+`CRCostModel` for what-if simulation at fleet scale.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
@@ -27,7 +36,9 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, ManagerConfig
+from repro.checkpoint.service import CheckpointService, CRStats
 from repro.core import engine
+from repro.core.crcost import CRCostModel
 from repro.core.omfs import scheduler_pass
 from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
@@ -76,9 +87,12 @@ class TrainJob:
 class ManagedJob:
     descriptor: Job               # the scheduler-visible job (cpus, class, ...)
     train_job: TrainJob
+    # CheckpointManager or CheckpointService — same save/restore duck type;
+    # the service additionally exposes stats() for calibration
     ckpt: CheckpointManager
     restores: int = 0
     checkpoints: int = 0
+    measured_cr_ticks: int = 0    # wall-time-derived overhead actually charged
 
     def template(self):
         return train_state_shapes(self.train_job.model, self.train_job.seed)
@@ -92,11 +106,20 @@ class ClusterExecutor:
         *,
         steps_per_tick: int = 1,
         policy: Callable = scheduler_pass,
+        tick_seconds: Optional[float] = None,
     ):
+        """``tick_seconds`` turns on measured C/R accounting: each real
+        checkpoint save / restore is timed and its wall time, converted to
+        whole ticks through `CRCostModel.ticks_from_seconds`, is charged to
+        the job's ``overhead`` — the executed-on-hardware analogue of the
+        simulator's predicted `cr_cost` charge (use a zero `cfg.cr_cost`
+        with it, or the job pays both the prediction and the measurement).
+        ``None`` (default) keeps accounting purely predictive."""
         self.state = ClusterState(config=config, users={u.name: u for u in users})
         self.jobs: Dict[int, ManagedJob] = {}
         self.steps_per_tick = steps_per_tick
         self.policy = policy
+        self.tick_seconds = tick_seconds
         self.events: List[str] = []
 
     def submit(self, mj: ManagedJob) -> None:
@@ -129,8 +152,19 @@ class ClusterExecutor:
             if was == JobState.RUNNING and now in (JobState.PENDING, JobState.KILLED):
                 # evicted: transparent checkpoint if the class allows it
                 if now == JobState.PENDING and mj.train_job.state is not None:
-                    mj.ckpt.save(int(mj.train_job.state.step), mj.train_job.snapshot_state())
+                    t0 = time.perf_counter()
+                    mj.ckpt.save(int(mj.train_job.state.step),
+                                 mj.train_job.snapshot_state())
+                    self._charge_measured(mj, time.perf_counter() - t0)
                     mj.checkpoints += 1
+                    # feed the real image size back into the descriptor so
+                    # the scheduler's predictive cost model sees measured
+                    # bytes from the first checkpoint on
+                    measured = getattr(
+                        getattr(mj.ckpt, "manager", mj.ckpt),
+                        "last_save_bytes", 0)
+                    if measured and d.state_bytes == 0:
+                        d.state_bytes = measured
                     self.events.append(f"t={t} job{d.id} CHECKPOINTED+EVICTED")
                 else:
                     self.events.append(f"t={t} job{d.id} KILLED")
@@ -138,7 +172,15 @@ class ClusterExecutor:
             elif was != JobState.RUNNING and now == JobState.RUNNING:
                 # (re)started: restore transparently if a snapshot exists
                 if mj.ckpt.latest_step() is not None:
+                    # drain pending async durable writes untimed — they are
+                    # save-side I/O, not part of the restore being charged
+                    drain = getattr(mj.ckpt, "drain", None) or getattr(
+                        getattr(mj.ckpt, "manager", None), "drain", None)
+                    if drain is not None:
+                        drain()
+                    t0 = time.perf_counter()
                     state, name = mj.ckpt.restore(mj.template())
+                    self._charge_measured(mj, time.perf_counter() - t0)
                     mj.train_job.restore_state(state)
                     mj.restores += 1
                     self.events.append(f"t={t} job{d.id} RESTORED {name}")
@@ -147,9 +189,45 @@ class ClusterExecutor:
                     self.events.append(f"t={t} job{d.id} COLD START")
         st.time += 1
 
+    def _charge_measured(self, mj: ManagedJob, seconds: float) -> None:
+        """Measured C/R wall time -> work units on the job, via the model's
+        unit conversion, so real and simulated accounting agree."""
+        if self.tick_seconds is None:
+            return
+        ticks = CRCostModel.ticks_from_seconds(seconds, self.tick_seconds)
+        mj.descriptor.overhead += ticks
+        mj.measured_cr_ticks += ticks
+
     def run(self, horizon: int) -> None:
         for _ in range(horizon):
             self.tick()
+
+    # -- measured-cost introspection -----------------------------------------
+    def cr_stats(self) -> CRStats:
+        """Aggregate measured C/R traffic over every managed job whose
+        checkpoint backend is a `CheckpointService`."""
+        agg = CRStats()
+        for mj in self.jobs.values():
+            if isinstance(mj.ckpt, CheckpointService):
+                s = mj.ckpt.stats()
+                agg.saves += s.saves
+                agg.restores += s.restores
+                agg.bytes_saved += s.bytes_saved
+                agg.bytes_restored += s.bytes_restored
+                agg.save_seconds += s.save_seconds
+                agg.restore_seconds += s.restore_seconds
+        return agg
+
+    def calibrate(self, tick_seconds: Optional[float] = None,
+                  **kw) -> CRCostModel:
+        """A `CRCostModel` from the fleet's measured save/restore traffic —
+        run real jobs under the executor, calibrate, then drive what-if
+        sweeps on the JAX backend with simulation and execution agreeing on
+        the cost units."""
+        ts = tick_seconds if tick_seconds is not None else self.tick_seconds
+        if not ts:
+            raise ValueError("calibrate() needs tick_seconds")
+        return CRCostModel.from_stats(self.cr_stats(), tick_seconds=ts, **kw)
 
 
 def small_train_job(tmpdir: Path, *, arch_cfg, vocab=None, seq=64, batch=8,

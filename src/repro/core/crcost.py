@@ -1,0 +1,233 @@
+"""Size-aware C/R cost model: the paper's thrashing-cost term, first-class.
+
+The paper's argument is that transparent checkpoint-restart preemption is
+cheap *because* the C/R cost is driven down by fast persistent-memory tiers
+(SplitFS/NOVA over DCPMM, §III).  That cost is therefore not a constant: it
+scales with the job's checkpoint image size and the tier's read/write
+bandwidth, modulated by compression (delta/zstd/quantization, see
+`checkpoint/`).  `CRCostModel` makes that relationship a deterministic,
+integer-valued function every scheduler layer shares:
+
+* ``save_cost(state_mib)``    — work units charged when a checkpointable
+  victim is evicted (the snapshot write);
+* ``restore_cost(state_mib)`` — work units charged when a previously
+  checkpointed job is (re)started (the snapshot read).
+
+Both are piecewise-linear — ``base + ceil(compressed_mib / mib_per_tick)``,
+saturated at ``cap_ticks`` — so the same expression evaluates on Python
+ints and on ``jnp.int32`` arrays, which is what keeps the Python reference
+and the vectorized JAX backend bit-identical (DESIGN.md §C/R cost model).
+
+Determinism rules (load-bearing for cross-backend equality):
+
+* all arithmetic is integer; ``ceil`` is ``(a + b - 1) // b``;
+* sizes enter in MiB (``state_mib_of``), clamped to ``MAX_STATE_MIB`` so
+  every intermediate fits int32 on the JAX side;
+* the compression ratio is a rational ``compress_num / compress_den``
+  (never a float) — ``from_stats`` quantizes measured ratios to /256ths.
+
+``from_stats`` calibrates a model from measured tier statistics (bytes and
+wall seconds — `checkpoint.tiers.TierStats` or the `CheckpointService`
+aggregate), converting bandwidth to MiB per scheduler tick.  That is the
+bridge from `benchmarks/bench_cr_cost.py`'s real measurements to a number
+the jitted scheduling tick can consume.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+MIB = 1 << 20
+#: Largest checkpoint image the model distinguishes (1 TiB).  Beyond this
+#: the cost saturates; the clamp keeps ``state_mib * compress_num`` inside
+#: int32 for the JAX backend (2**20 MiB * num<=1024 < 2**31).
+MAX_STATE_MIB = 1 << 20
+#: Default cost saturation: no single C/R event is charged more than this.
+DEFAULT_CAP_TICKS = 1 << 20
+
+
+def _ceil_div(a, b):
+    """Integer ceil-division that works on Python ints and jnp arrays."""
+    return (a + b - 1) // b
+
+
+def _saturate(v, cap: int):
+    """min(v, cap) for Python ints and jnp arrays alike."""
+    if isinstance(v, int):
+        return min(v, cap)
+    import jax.numpy as jnp
+
+    return jnp.minimum(v, cap)
+
+
+def state_mib_of(state_bytes: int) -> int:
+    """Checkpoint image size in whole MiB (ceil), clamped to MAX_STATE_MIB.
+
+    0 bytes -> 0 MiB (a job that declared no state is free to C/R under a
+    pure-bandwidth model; the ``*_base`` terms still apply)."""
+    if state_bytes <= 0:
+        return 0
+    return min(_ceil_div(int(state_bytes), MIB), MAX_STATE_MIB)
+
+
+@dataclass(frozen=True)
+class CRCostModel:
+    """Deterministic integer C/R cost as a function of checkpoint size.
+
+    ``save_cost(m)    = min(save_base    + ceil(c(m) * save_tick_den / save_mib_per_tick),       cap_ticks)``
+    ``restore_cost(m) = min(restore_base + ceil(c(m) * restore_tick_den / restore_mib_per_tick), cap_ticks)``
+    with ``c(m) = ceil(m * compress_num / compress_den)`` the compressed
+    image size.  Bandwidth is the RATIONAL ``save_mib_per_tick /
+    save_tick_den`` MiB per tick (den=1 for hand-written models; calibration
+    quantizes to /256ths so tiers slower than 1 MiB/tick are still priced
+    correctly instead of floored to 1).  ``save_mib_per_tick <= 0`` means
+    "free transfer" (only the base term is charged).  The all-defaults
+    model charges nothing — legacy ``SchedulerConfig.cr_overhead``
+    behaviour is exactly preserved.
+
+    Hashable (frozen) on purpose: it rides `SchedulerConfig`, which is a
+    static jit argument and an `lru_cache` key for the compiled tick scans.
+    """
+
+    save_mib_per_tick: int = 0       # fast-tier write bandwidth numerator
+    restore_mib_per_tick: int = 0    # fast-tier read bandwidth numerator
+    save_base: int = 0               # fixed per-checkpoint work units
+    restore_base: int = 0            # fixed per-restore work units
+    compress_num: int = 1            # effective bytes = raw * num / den
+    compress_den: int = 1
+    save_tick_den: int = 1           # bandwidth = mib_per_tick / tick_den
+    restore_tick_den: int = 1
+    cap_ticks: int = DEFAULT_CAP_TICKS
+
+    def __post_init__(self):
+        assert self.compress_num >= 0 and self.compress_den >= 1
+        # int32 safety on the JAX side: compressed mib <= 4 * MAX_STATE_MIB
+        # = 2**22, times tick_den <= 256 stays under 2**31
+        assert self.compress_num <= 4 * self.compress_den, \
+            "compression ratio must be <= 4 (quantize to num/den)"
+        assert self.compress_num <= 1024 and self.compress_den <= 256, \
+            "keep num/den small: state_mib * num must fit int32"
+        assert 1 <= self.save_tick_den <= 256
+        assert 1 <= self.restore_tick_den <= 256
+        assert self.cap_ticks >= 0
+
+    # -- the model ----------------------------------------------------------
+    def compressed_mib(self, state_mib):
+        """Effective MiB moved after compression (int or jnp array)."""
+        return _ceil_div(state_mib * self.compress_num, self.compress_den)
+
+    def _cost(self, state_mib, mib_per_tick: int, tick_den: int, base: int):
+        moved = self.compressed_mib(state_mib)
+        if mib_per_tick > 0:
+            var = _ceil_div(moved * tick_den, mib_per_tick)
+        else:
+            var = moved * 0                      # free transfer, keep shape
+        return _saturate(base + var, self.cap_ticks)
+
+    def save_cost(self, state_mib):
+        """Work units charged at eviction-checkpoint; int in, int out —
+        or elementwise over a jnp int32 array."""
+        return self._cost(state_mib, self.save_mib_per_tick,
+                          self.save_tick_den, self.save_base)
+
+    def restore_cost(self, state_mib):
+        """Work units charged at restart-restore (same polymorphism)."""
+        return self._cost(state_mib, self.restore_mib_per_tick,
+                          self.restore_tick_den, self.restore_base)
+
+    @property
+    def is_free(self) -> bool:
+        """True iff the model never charges anything (the legacy default)."""
+        return (self.save_base == 0 and self.restore_base == 0
+                and self.save_mib_per_tick <= 0
+                and self.restore_mib_per_tick <= 0) or self.cap_ticks == 0
+
+    # -- calibration --------------------------------------------------------
+    @classmethod
+    def from_measured(
+        cls,
+        *,
+        save_bytes_per_s: float,
+        restore_bytes_per_s: float,
+        tick_seconds: float,
+        compress_ratio: float = 1.0,
+        save_base: int = 0,
+        restore_base: int = 0,
+        cap_ticks: int = DEFAULT_CAP_TICKS,
+    ) -> "CRCostModel":
+        """Build a model from measured bandwidths.
+
+        ``tick_seconds`` is the wall-clock length of one scheduler tick —
+        the single unit conversion between the real executor and the
+        simulator.  Bandwidths quantize to /256ths of a MiB per tick
+        (floor of the representable grid, min 1/256), so tiers slower than
+        1 MiB/tick are charged their real cost instead of being flattened
+        to 1 MiB/tick; ``compress_ratio`` (stored/raw) quantizes to
+        /256ths too.  NOTE: pass ``compress_ratio`` only when the measured
+        bandwidth was taken on *raw* traffic that will additionally be
+        compressed — stats whose wall time already includes compression
+        (e.g. `CheckpointService` save timings) are an *effective* raw
+        bandwidth and want the default 1.0.
+        """
+        def mib_per_tick(bps: float):
+            if bps <= 0:
+                return 0
+            return max(1, int(round(bps * tick_seconds / MIB * 256)))
+
+        num = max(0, min(1024, int(round(compress_ratio * 256))))
+        return cls(
+            save_mib_per_tick=mib_per_tick(save_bytes_per_s),
+            restore_mib_per_tick=mib_per_tick(restore_bytes_per_s),
+            save_base=save_base,
+            restore_base=restore_base,
+            compress_num=num,
+            compress_den=256,
+            save_tick_den=256,
+            restore_tick_den=256,
+            cap_ticks=cap_ticks,
+        )
+
+    @classmethod
+    def from_stats(cls, stats: Any, *, tick_seconds: float,
+                   compress_ratio: float = 1.0, save_base: int = 0,
+                   restore_base: int = 0,
+                   cap_ticks: int = DEFAULT_CAP_TICKS) -> "CRCostModel":
+        """Calibrate from measured tier statistics.
+
+        ``stats`` is anything exposing bytes/seconds counters —
+        `checkpoint.tiers.TierStats` (``bytes_written``/``bytes_read``,
+        ``save_seconds``/``restore_seconds``) or the `CheckpointService`
+        aggregate (``bytes_saved``/``bytes_restored``).  Missing restore
+        traffic falls back to the save-side bandwidth (write-limited tiers).
+        """
+        saved = getattr(stats, "bytes_saved", None)
+        if saved is None:
+            saved = getattr(stats, "bytes_written", 0)
+        restored = getattr(stats, "bytes_restored", None)
+        if restored is None:
+            restored = getattr(stats, "bytes_read", 0)
+        t_save = getattr(stats, "save_seconds", 0.0)
+        t_rest = getattr(stats, "restore_seconds", 0.0)
+
+        save_bps = saved / t_save if (saved and t_save > 0) else 0.0
+        restore_bps = restored / t_rest if (restored and t_rest > 0) else 0.0
+        if restore_bps <= 0:
+            restore_bps = save_bps
+        return cls.from_measured(
+            save_bytes_per_s=save_bps, restore_bytes_per_s=restore_bps,
+            tick_seconds=tick_seconds, compress_ratio=compress_ratio,
+            save_base=save_base, restore_base=restore_base,
+            cap_ticks=cap_ticks)
+
+    # -- executor accounting -------------------------------------------------
+    @staticmethod
+    def ticks_from_seconds(seconds: float, tick_seconds: float) -> int:
+        """Measured wall time -> whole scheduler ticks (ceil, >= 0).
+
+        The real executor charges *measured* C/R overhead through this so
+        simulation (predicted, via save/restore_cost) and execution agree
+        on units."""
+        if seconds <= 0 or tick_seconds <= 0:
+            return 0
+        return int(math.ceil(seconds / tick_seconds))

@@ -174,7 +174,7 @@ def run_jax(users: List[User], jobs: List[Job], cfg: SchedulerConfig,
 
     Returns (final JobTable, busy[t] series); step 4 of the protocol is the
     per-tick busy reduction carried out of the scan."""
-    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total)
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)
     if tbl.cpus.shape[0] == 0:
         # passes index order[0]/cumsum[-1]; match the python backend instead
         return tbl, jnp.zeros((horizon,), jnp.int32)
@@ -246,7 +246,10 @@ class EngineResult:
         return tuple(s[1:] for s in omfs_jax.signature_from_table(self.table))
 
     def summary(self) -> Dict[str, float]:
-        """One comparison-table row: utilization / wait / preemption counts."""
+        """One comparison-table row: utilization / wait / preemption counts
+        plus the paper's thrashing-cost terms — goodput (cpu-ticks that
+        advanced *useful* work, per machine capacity) and the fraction of
+        executed cpu-ticks wasted on C/R overhead or killed jobs."""
         if self.sim is not None:
             jobs = self.sim.job_table()
             started = [j for j in jobs if j.first_start >= 0]
@@ -255,6 +258,11 @@ class EngineResult:
             ckpt = sum(j.n_checkpoints for j in jobs)
             killed = sum(1 for j in jobs if j.state == JobState.KILLED)
             done = sum(1 for j in jobs if j.state == JobState.DONE)
+            was_killed = np.asarray(
+                [j.state == JobState.KILLED for j in jobs])
+            progress = np.asarray([j.progress for j in jobs])
+            work = np.asarray([j.work for j in jobs])
+            cpus = np.asarray([j.cpus for j in jobs])
         else:
             t = jax.device_get(self.table)
             started = t.first_start >= 0
@@ -263,10 +271,23 @@ class EngineResult:
             ckpt = int(t.n_ckpt.sum())
             killed = int((t.state == omfs_jax.KILLED).sum())
             done = int((t.state == omfs_jax.DONE).sum())
+            was_killed = np.asarray(t.state) == omfs_jax.KILLED
+            progress = np.asarray(t.progress)
+            work = np.asarray(t.work)
+            cpus = np.asarray(t.cpus)
+        # useful = progress toward `work` (overhead units come on top and
+        # count as waste); killed jobs' entire progress is lost work
+        useful = np.where(was_killed, 0, np.minimum(progress, work)) * cpus
+        executed = progress * cpus
+        wasted = executed.sum() - useful.sum()
+        horizon = max(self.busy_series().size, 1)
         return {
             "policy": self.policy,
             "backend": self.backend,
             "utilization": self.utilization(),
+            "goodput": float(useful.sum())
+            / float(self.config.cpu_total * horizon),
+            "wasted_frac": float(wasted) / float(max(executed.sum(), 1)),
             "mean_wait": float(np.mean(waits)) if len(waits) else 0.0,
             "preemptions": preempt,
             "checkpoints": ckpt,

@@ -28,6 +28,8 @@ class Metrics:
     preemptions: int
     checkpoints: int
     cr_overhead_units: int               # work units burned by C/R
+    goodput: float                       # useful cpu-ticks / machine capacity
+    wasted_work_frac: float              # executed cpu-ticks lost to C/R + kills
     violation_ticks: float               # mean ticks/user with a justified complaint
     reclaim_latency: Dict[int, int]      # job id -> ticks from submit to first start
 
@@ -89,6 +91,17 @@ def compute_metrics(result: SimResult) -> Metrics:
                 ) else 0
         violations[t] = v
 
+    # goodput / wasted work (the paper's thrashing-cost term): progress
+    # toward `work` is useful; overhead units and killed jobs' progress are
+    # cpu-ticks the machine executed but the users never benefit from
+    useful = sum(
+        min(j.progress, j.work) * j.cpus
+        for j in jobs if j.state != JobState.KILLED
+    )
+    executed = sum(j.progress * j.cpus for j in jobs)
+    goodput = useful / max(cfg.cpu_total * horizon, 1)
+    wasted_frac = (executed - useful) / max(executed, 1)
+
     done = [j for j in jobs if j.state == JobState.DONE]
     return Metrics(
         utilization=util,
@@ -101,6 +114,8 @@ def compute_metrics(result: SimResult) -> Metrics:
         preemptions=sum(j.n_preemptions for j in jobs),
         checkpoints=sum(j.n_checkpoints for j in jobs),
         cr_overhead_units=sum(j.overhead for j in jobs),
+        goodput=goodput,
+        wasted_work_frac=wasted_frac,
         violation_ticks=float(violations.mean()),
         reclaim_latency=reclaim,
     )

@@ -40,6 +40,12 @@ class Decision:
 
 
 def _start(state: ClusterState, job: Job) -> None:
+    if job.n_checkpoints > 0:
+        # transparent restore from the latest snapshot: charge the
+        # size-dependent read cost (restart after a kill with
+        # drop_killed=False restarts from scratch -> n_checkpoints == 0,
+        # nothing to restore, nothing charged)
+        job.overhead += state.config.cr_cost.restore_cost(job.state_mib)
     job.state = JobState.RUNNING
     job.run_start = state.time
     if job.first_start < 0:
@@ -52,7 +58,9 @@ def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
     victim.n_preemptions += 1
     if victim.job_class == JobClass.CHECKPOINTABLE:
         victim.n_checkpoints += 1
-        victim.overhead += state.config.cr_overhead
+        # snapshot write: legacy flat term + size-dependent save cost
+        victim.overhead += state.config.cr_overhead + \
+            state.config.cr_cost.save_cost(victim.state_mib)
         victim.state = JobState.PENDING          # line 35: back to Jobs_Submitted
         # memoryless: re-queued with its original priority; progress is kept
         # (transparent C/R) — the whole point of the paper.

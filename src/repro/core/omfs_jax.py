@@ -24,6 +24,14 @@ Sequential admission is inherent to Algorithm 1 (each admission changes the
 state the next decision sees), so the pass is a ``fori_loop`` over queue
 positions; the ``pass_depth`` knob (same as SLURM's sched_max_job_start)
 bounds it at scale.
+
+C/R costs are size-aware (`core.crcost.CRCostModel`): the table carries
+per-job ``state_mib`` plus precomputed ``cost_save``/``cost_restore``
+columns (sizes are static, so the model evaluates once at build time), and
+the shared primitives charge them — `apply_evictions` adds the save cost to
+each checkpointed victim, `admit_job` adds the restore cost when a job with
+an existing checkpoint restarts.  Both are O(1) scatters, so the
+non-eviction fast path does no extra O(J) work.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.crcost import CRCostModel
 from repro.core.types import JobClass, SchedulerConfig
 
 # JobState encoding (matches types.JobState)
@@ -51,6 +60,12 @@ class JobTable(NamedTuple):
     priority: jax.Array    # int32
     jclass: jax.Array      # int32 JobClass
     submit: jax.Array      # int32 tick
+    state_mib: jax.Array   # int32 checkpoint image size (MiB)
+    # C/R costs precomputed from (cfg.cr_cost, cfg.cr_overhead, state_mib):
+    # sizes are static per job, so the model evaluates once at table build
+    # and the passes pay only an O(1) gather per charge
+    cost_save: jax.Array       # int32 work units charged per checkpoint
+    cost_restore: jax.Array    # int32 work units charged per restore
     # runtime
     state: jax.Array       # int32 JobState
     progress: jax.Array
@@ -63,14 +78,23 @@ class JobTable(NamedTuple):
     backfilled: jax.Array  # int32 0/1: ever admitted by queue-jumping
 
 
-def table_from_jobs(jobs, users, cpu_total: int) -> Tuple[JobTable, jax.Array]:
+def table_from_jobs(jobs, users, cpu_total: int,
+                    config: Optional[SchedulerConfig] = None,
+                    ) -> Tuple[JobTable, jax.Array]:
     """Build ``(JobTable, entitled_cpus[U])`` from core.types objects.
 
     Rows are ordered by job id, matching the Python backend's job table, so
-    per-row signatures are directly comparable across backends."""
+    per-row signatures are directly comparable across backends.  ``config``
+    supplies the C/R cost model: the per-job save/restore cost columns are
+    evaluated here with Python integers — the exact arithmetic the Python
+    backend charges at runtime — so cross-backend bit-equality holds by
+    construction.  ``config=None`` builds a free-C/R table (legacy callers).
+    """
     uidx = {u.name: i for i, u in enumerate(users)}
     j = sorted(jobs, key=lambda x: x.id)
     n = len(j)
+    model = config.cr_cost if config is not None else CRCostModel()
+    flat = config.cr_overhead if config is not None else 0
     arr = lambda f, d=jnp.int32: jnp.asarray([f(x) for x in j], d)
     table = JobTable(
         user=arr(lambda x: uidx[x.user]),
@@ -79,6 +103,9 @@ def table_from_jobs(jobs, users, cpu_total: int) -> Tuple[JobTable, jax.Array]:
         priority=arr(lambda x: x.priority),
         jclass=arr(lambda x: int(x.job_class)),
         submit=arr(lambda x: x.submit_time),
+        state_mib=arr(lambda x: x.state_mib),
+        cost_save=arr(lambda x: flat + model.save_cost(x.state_mib)),
+        cost_restore=arr(lambda x: model.restore_cost(x.state_mib)),
         state=jnp.full((n,), UNSUB, jnp.int32),
         progress=jnp.zeros((n,), jnp.int32),
         run_start=jnp.full((n,), -1, jnp.int32),
@@ -126,7 +153,13 @@ def running_usage(tbl: JobTable, num_users: int):
 
 def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
               admit: jax.Array) -> JobTable:
-    """Start job ``idx`` (lines 37-38) iff ``admit``; O(1) scatter updates."""
+    """Start job ``idx`` (lines 37-38) iff ``admit``; O(1) scatter updates.
+
+    A job with a checkpoint (``n_ckpt > 0``) restarts by restoring its
+    latest snapshot, so admission charges its precomputed restore cost —
+    the twin of ``omfs._start``."""
+    restore = jnp.where(admit & (tbl.n_ckpt[idx] > 0),
+                        tbl.cost_restore[idx], 0)
     return tbl._replace(
         state=tbl.state.at[idx].set(
             jnp.where(admit, RUNNING, tbl.state[idx])),
@@ -135,6 +168,7 @@ def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
         first_start=tbl.first_start.at[idx].set(
             jnp.where(admit & (tbl.first_start[idx] < 0), t,
                       tbl.first_start[idx])),
+        overhead=tbl.overhead.at[idx].add(restore),
     )
 
 
@@ -170,7 +204,7 @@ def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
             jnp.where(kill, (KILLED if cfg.drop_killed else PENDING),
                       tbl.state)),
         progress=jnp.where(kill & (not cfg.drop_killed), 0, tbl.progress),
-        overhead=tbl.overhead + jnp.where(ckpt, cfg.cr_overhead, 0),
+        overhead=tbl.overhead + jnp.where(ckpt, tbl.cost_save, 0),
         run_start=jnp.where(planned, -1, tbl.run_start),
         finish=jnp.where(kill & cfg.drop_killed, t, tbl.finish),
         n_preempt=tbl.n_preempt + planned.astype(jnp.int32),

@@ -12,6 +12,12 @@ All passes share the engine's policy contract — ``pass_fn(cfg, ent, t, tbl)
 -> tbl`` — and thread their admission aggregates (per-user usage, busy,
 head reservation) through the ``fori_loop`` carry: O(1) per queue position
 for everything but backfill's once-per-tick reservation sort.
+
+Size-aware C/R costs come for free: the shared `admit_job` /
+`apply_evictions` primitives charge the JobTable's precomputed
+``cost_restore`` / ``cost_save`` columns (`core.crcost`), so backfill_cr's
+preemptions and every restart pay the same size-dependent overhead as the
+Python twins.
 """
 from __future__ import annotations
 

@@ -11,6 +11,8 @@ import itertools
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
+from repro.core.crcost import CRCostModel, state_mib_of
+
 
 class JobClass(enum.IntEnum):
     """Paper §II: non-preemptible jobs run only within the entitlement;
@@ -58,6 +60,7 @@ class Job:
     priority: int = 0              # j.priority — among the *user's* jobs
     job_class: JobClass = JobClass.CHECKPOINTABLE
     submit_time: int = 0
+    state_bytes: int = 0           # checkpoint image size (C/R cost driver)
     id: int = field(default_factory=lambda: next(_job_ids))
 
     # runtime state
@@ -75,6 +78,10 @@ class Job:
     def remaining(self) -> int:
         return self.work + self.overhead - self.progress
 
+    @property
+    def state_mib(self) -> int:
+        return state_mib_of(self.state_bytes)
+
     def clone(self) -> "Job":
         return replace(self)
 
@@ -86,7 +93,8 @@ class SchedulerConfig:
 
     cpu_total: int = 256
     quantum: int = 30              # minimal uninterrupted run before evictable
-    cr_overhead: int = 0           # work units added per checkpoint+restart
+    cr_overhead: int = 0           # legacy flat work units per checkpoint
+    cr_cost: CRCostModel = CRCostModel()   # size-aware save/restore costs
     drop_killed: bool = True       # line 34: non-checkpointable victims are dropped
     # ---- beyond-paper extensions (all default OFF for fidelity) ----
     victim_filter_over_entitlement: bool = False   # only evict over-entitlement users

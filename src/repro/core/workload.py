@@ -2,9 +2,11 @@
 
 Models the regimes the paper cares about: bursty per-user demand (a user
 suddenly needs its entitlement back), long-tailed job durations, mixed job
-classes, and jobs larger than their owner's whole entitlement (§II: "an
+classes, jobs larger than their owner's whole entitlement (§II: "an
 entity can use it to run a single job that is larger than its whole
-entitlement").
+entitlement"), and — the C/R cost axis — heterogeneous lognormal
+checkpoint image sizes plus `thrashing_scenario`, where the size-aware
+cost model materially changes the schedule.
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.crcost import MAX_STATE_MIB, MIB
 from repro.core.types import Job, JobClass, User
 
 
@@ -30,6 +33,9 @@ class WorkloadSpec:
     class_mix: Sequence[float] = (0.2, 0.2, 0.6)  # non-preempt, preempt, ckpt
     equal_shares: bool = True
     seed: int = 0
+    # checkpoint image sizes (heterogeneous C/R cost axis): lognormal MiB
+    mean_state_mib: float = 512.0
+    sigma_state: float = 1.2
 
 
 def make_users(spec: WorkloadSpec, rng: Optional[np.random.Generator] = None) -> List[User]:
@@ -72,6 +78,15 @@ def make_jobs(spec: WorkloadSpec, users: List[User]) -> List[Job]:
                 priority=int(rng.integers(0, 4)),
                 job_class=job_class, submit_time=t,
             ))
+    # Checkpoint image sizes, long-tailed like real training jobs.  Drawn
+    # from a SEPARATE stream so the arrival/size/class draws above — and
+    # therefore every schedule under a free cost model — stay bit-identical
+    # to pre-cost-model workloads.
+    rng_state = np.random.default_rng(spec.seed + 2)
+    for job in jobs:
+        mib = rng_state.lognormal(np.log(spec.mean_state_mib),
+                                  spec.sigma_state)
+        job.state_bytes = int(min(max(mib, 1.0), MAX_STATE_MIB)) * MIB
     return jobs
 
 
@@ -104,3 +119,34 @@ def oversub_scenario(cpu_total: int = 256):
     big = Job(user="A", cpus=int(cpu_total * 0.75), work=300,
               job_class=JobClass.CHECKPOINTABLE, submit_time=1)
     return users, [big], big.id
+
+
+def thrashing_scenario(cpu_total: int = 64, quantum: int = 5,
+                       n_claims: int = 12, state_gib: int = 64):
+    """C/R cost materially changes the schedule (paper §III thrashing).
+
+    User B fills the machine with long checkpointable jobs carrying *huge*
+    checkpoint images; user A submits a periodic stream of short entitled
+    claims, each of which evicts B's jobs.  Under a free cost model the
+    eviction ping-pong is harmless; under a calibrated model every bounce
+    charges B save+restore work proportional to ``state_gib``, so B's
+    completions slide, later admissions see a different machine, and
+    goodput drops — the schedules (not just the metrics) diverge.
+
+    Deterministic by construction (no RNG).  Returns ``(users, jobs)``;
+    B's flood jobs are the ones with ``state_bytes > 0``."""
+    users = [User("A", 50.0), User("B", 50.0)]
+    jobs = [
+        Job(user="B", cpus=cpu_total // 4, work=300,
+            job_class=JobClass.CHECKPOINTABLE, submit_time=0,
+            state_bytes=state_gib << 30)
+        for _ in range(4)
+    ]
+    period = max(2 * quantum, 4)
+    for i in range(n_claims):
+        jobs.append(Job(
+            user="A", cpus=cpu_total // 2, work=max(quantum, 4),
+            job_class=JobClass.CHECKPOINTABLE,
+            submit_time=quantum + 1 + i * period,
+        ))
+    return users, jobs

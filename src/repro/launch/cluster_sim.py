@@ -7,6 +7,7 @@ on either engine backend.
 import argparse
 
 from repro.core import engine
+from repro.core.crcost import CRCostModel
 from repro.core.metrics import compute_metrics
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -23,6 +24,10 @@ def main(argv=None):
     ap.add_argument("--horizon", type=int, default=800)
     ap.add_argument("--quantum", type=int, default=20)
     ap.add_argument("--cr-overhead", type=int, default=2)
+    ap.add_argument("--save-mib-per-tick", type=int, default=0,
+                    help="size-aware C/R: tier write bandwidth (0 = free)")
+    ap.add_argument("--restore-mib-per-tick", type=int, default=0,
+                    help="size-aware C/R: tier read bandwidth (0 = free)")
     ap.add_argument("--pass-depth", type=int, default=64,
                     help="per-tick queue sweep bound on the jax backend")
     ap.add_argument("--arrival-rate", type=float, default=0.08)
@@ -35,8 +40,11 @@ def main(argv=None):
                         arrival_rate=args.arrival_rate)
     users = make_users(spec)
     jobs = make_jobs(spec, users)
-    cfg = SchedulerConfig(cpu_total=args.chips, quantum=args.quantum,
-                          cr_overhead=args.cr_overhead)
+    cfg = SchedulerConfig(
+        cpu_total=args.chips, quantum=args.quantum,
+        cr_overhead=args.cr_overhead,
+        cr_cost=CRCostModel(save_mib_per_tick=args.save_mib_per_tick,
+                            restore_mib_per_tick=args.restore_mib_per_tick))
     print(f"{len(jobs)} jobs, {args.tenants} tenants, {args.chips} chips, "
           f"policy={args.policy}, backend={backend}")
 
@@ -46,13 +54,16 @@ def main(argv=None):
 
     if backend == "jax":
         s = res.summary()
-        print(f"utilization {s['utilization']:.3f} | wait {s['mean_wait']:.1f} "
-              f"| preemptions {s['preemptions']} | checkpoints "
-              f"{s['checkpoints']} | killed {s['killed']} | done {s['done']}")
+        print(f"utilization {s['utilization']:.3f} | goodput "
+              f"{s['goodput']:.3f} | wasted {s['wasted_frac']:.3f} | wait "
+              f"{s['mean_wait']:.1f} | preemptions {s['preemptions']} | "
+              f"checkpoints {s['checkpoints']} | killed {s['killed']} | "
+              f"done {s['done']}")
         return
 
     m = compute_metrics(res.sim)
-    print(f"utilization {m.utilization:.3f} | jain {m.jain_fairness:.3f} | "
+    print(f"utilization {m.utilization:.3f} | goodput {m.goodput:.3f} | "
+          f"wasted {m.wasted_work_frac:.3f} | jain {m.jain_fairness:.3f} | "
           f"wait {m.mean_wait:.1f} | preemptions {m.preemptions} | "
           f"checkpoints {m.checkpoints} | killed {m.killed_jobs}")
 

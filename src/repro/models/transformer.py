@@ -175,9 +175,10 @@ def _moe_dispatch(cfg: ModelConfig, ffn_params: dict, h: jax.Array):
     sort+ragged_dot dispatch and falls back to full replication — measured
     366 GiB/device on dbrx-132b).  Single-device (tests, smoke configs):
     the pure-pjit reference."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is not None and not mesh.empty and "model" in mesh.axis_names \
-            and mesh.shape["model"] > 1 and cfg.moe.n_routed % mesh.shape["model"] == 0:
+    from repro.distributed.collectives import usable_mesh
+
+    mesh = usable_mesh()     # version-tolerant ambient-mesh probe
+    if mesh is not None and cfg.moe.n_routed % mesh.shape["model"] == 0:
         from repro.distributed.moe_ep import moe_ffn_ep
 
         return moe_ffn_ep(cfg.moe, ffn_params, h, mesh)

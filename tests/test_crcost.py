@@ -1,0 +1,246 @@
+"""The C/R cost model layer: integer determinism, scalar==vectorized,
+calibration, goodput accounting, and the thrashing scenario where the cost
+materially changes the schedule."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.crcost import (
+    DEFAULT_CAP_TICKS,
+    MAX_STATE_MIB,
+    MIB,
+    CRCostModel,
+    state_mib_of,
+)
+from repro.core.metrics import compute_metrics
+from repro.core.types import Job, JobClass, SchedulerConfig, User
+from repro.core.workload import thrashing_scenario
+
+
+# ---------------------------------------------------------------------------
+# model arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_default_model_is_free():
+    m = CRCostModel()
+    assert m.is_free
+    for mib in (0, 1, 17, 4096, MAX_STATE_MIB):
+        assert m.save_cost(mib) == 0
+        assert m.restore_cost(mib) == 0
+
+
+def test_costs_are_integer_piecewise_linear():
+    m = CRCostModel(save_mib_per_tick=1024, restore_mib_per_tick=2048,
+                    save_base=2, restore_base=1)
+    assert m.save_cost(0) == 2                    # base only
+    assert m.save_cost(1) == 3                    # ceil(1/1024) = 1
+    assert m.save_cost(1024) == 3
+    assert m.save_cost(1025) == 4
+    assert m.restore_cost(4096) == 1 + 2
+    # monotone in size
+    costs = [m.save_cost(x) for x in range(0, 10_000, 97)]
+    assert costs == sorted(costs)
+
+
+def test_cost_saturates_at_cap():
+    m = CRCostModel(save_mib_per_tick=1, cap_ticks=50)
+    assert m.save_cost(10) == 10
+    assert m.save_cost(1_000_000) == 50
+
+
+def test_compression_ratio_is_rational():
+    half = CRCostModel(save_mib_per_tick=1, compress_num=128, compress_den=256)
+    full = CRCostModel(save_mib_per_tick=1)
+    assert half.save_cost(1000) == 500
+    assert full.save_cost(1000) == 1000
+
+
+def test_state_mib_of_rounds_up_and_clamps():
+    assert state_mib_of(0) == 0
+    assert state_mib_of(1) == 1
+    assert state_mib_of(MIB) == 1
+    assert state_mib_of(MIB + 1) == 2
+    assert state_mib_of(1 << 60) == MAX_STATE_MIB
+
+
+@settings(max_examples=20, deadline=None)
+@given(bw_s=st.integers(1, 8192), bw_r=st.integers(1, 8192),
+       base_s=st.integers(0, 5), base_r=st.integers(0, 5),
+       num=st.integers(1, 512))
+def test_scalar_matches_vectorized(bw_s, bw_r, base_s, base_r, num):
+    """The same expression must evaluate identically on Python ints and on
+    jnp.int32 arrays — the property that keeps backends bit-identical."""
+    m = CRCostModel(save_mib_per_tick=bw_s, restore_mib_per_tick=bw_r,
+                    save_base=base_s, restore_base=base_r,
+                    compress_num=num, compress_den=256)
+    sizes = [0, 1, 2, 100, 1023, 1024, 1025, 65536, MAX_STATE_MIB]
+    vec = jnp.asarray(sizes, jnp.int32)
+    assert [int(x) for x in m.save_cost(vec)] == \
+        [m.save_cost(s) for s in sizes]
+    assert [int(x) for x in m.restore_cost(vec)] == \
+        [m.restore_cost(s) for s in sizes]
+
+
+def test_model_is_hashable_config_key():
+    a = CRCostModel(save_mib_per_tick=8)
+    b = CRCostModel(save_mib_per_tick=8)
+    assert hash(a) == hash(b) and a == b
+    cfg = SchedulerConfig(cr_cost=a)
+    hash(cfg)   # SchedulerConfig stays a valid jit static arg / cache key
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+class _FakeStats:
+    bytes_written = 100 * MIB
+    bytes_read = 200 * MIB
+    save_seconds = 1.0
+    restore_seconds = 1.0
+
+
+def test_from_stats_converts_bandwidth_to_mib_per_tick():
+    m = CRCostModel.from_stats(_FakeStats(), tick_seconds=0.5)
+    # 100 MiB/s * 0.5 s/tick = 50 MiB/tick, on the /256 rational grid
+    assert m.save_mib_per_tick / m.save_tick_den == 50
+    assert m.restore_mib_per_tick / m.restore_tick_den == 100
+    assert m.compress_num == 256 and m.compress_den == 256
+    assert m.save_cost(100) == 2          # ceil(100/50)
+
+
+def test_from_stats_restore_falls_back_to_save_bandwidth():
+    class WriteOnly:
+        bytes_written = 100 * MIB
+        bytes_read = 0
+        save_seconds = 1.0
+        restore_seconds = 0.0
+
+    m = CRCostModel.from_stats(WriteOnly(), tick_seconds=1.0)
+    assert m.restore_mib_per_tick == m.save_mib_per_tick
+    assert m.save_mib_per_tick / m.save_tick_den == 100
+
+
+def test_from_measured_slow_tier_not_floored_to_one_mib():
+    """A tier slower than 1 MiB/tick must charge its REAL cost: the /256
+    rational grid prices 0.25 MiB/tick as 4 ticks/MiB instead of silently
+    flooring the bandwidth to 1 MiB/tick."""
+    m = CRCostModel.from_measured(save_bytes_per_s=0.25 * MIB,
+                                  restore_bytes_per_s=0.25 * MIB,
+                                  tick_seconds=1.0)
+    assert m.save_mib_per_tick == 64 and m.save_tick_den == 256
+    assert m.save_cost(100) == 400        # 100 MiB / 0.25 MiB/tick
+
+
+def test_from_measured_min_representable_bandwidth():
+    m = CRCostModel.from_measured(save_bytes_per_s=10.0,
+                                  restore_bytes_per_s=10.0,
+                                  tick_seconds=0.001)
+    assert m.save_mib_per_tick == 1       # floor of the grid: 1/256 MiB/tick
+    assert m.save_tick_den == 256
+    assert m.save_cost(100) == 25600
+
+
+def test_ticks_from_seconds():
+    assert CRCostModel.ticks_from_seconds(0.0, 0.1) == 0
+    assert CRCostModel.ticks_from_seconds(0.05, 0.1) == 1
+    assert CRCostModel.ticks_from_seconds(0.25, 0.1) == 3
+
+
+# ---------------------------------------------------------------------------
+# scheduling semantics
+# ---------------------------------------------------------------------------
+
+
+def _eviction_setup(model, state_gib=4):
+    """B holds the machine with a big-state job; A's entitled claim evicts
+    it.  Returns the final python EngineResult and the victim job id."""
+    users = [User("A", 50.0), User("B", 50.0)]
+    victim = Job(user="B", cpus=24, work=500,
+                 job_class=JobClass.CHECKPOINTABLE, submit_time=0,
+                 state_bytes=state_gib << 30)
+    claim = Job(user="A", cpus=16, work=5,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=10)
+    cfg = SchedulerConfig(cpu_total=32, quantum=5, cr_cost=model)
+    res = engine.simulate(users, [victim, claim], cfg, 200,
+                          policy="omfs", backend="python")
+    return res, victim.id
+
+
+def test_save_charged_at_eviction_restore_at_restart():
+    """One eviction ping-pong, fully deterministic: B's 4 GiB job is
+    checkpointed exactly once (A's claim) and restarts exactly once after
+    A's 5-tick job finishes — so its overhead is one save + one restore."""
+    gib = 4
+    model = CRCostModel(save_mib_per_tick=1024, restore_mib_per_tick=2048,
+                        save_base=1, restore_base=1)
+    res, vid = _eviction_setup(model, state_gib=gib)
+    v = res.sim.state.jobs[vid]
+    mib = gib << 10                      # 4096 MiB
+    assert model.save_cost(mib) == 5     # 1 + 4096/1024
+    assert model.restore_cost(mib) == 3  # 1 + 4096/2048
+    assert v.n_checkpoints == 1
+    assert v.overhead == 5 + 3
+    assert v.state.name == "RUNNING"     # restarted and still finishing
+
+
+def test_free_model_preserves_legacy_cr_overhead_semantics():
+    """cr_overhead alone must behave exactly as before the cost model:
+    a flat charge per checkpoint, nothing at restart."""
+    res, vid = _eviction_setup(CRCostModel())
+    v_free = res.sim.state.jobs[vid]
+    assert v_free.overhead == 0
+
+    users = [User("A", 50.0), User("B", 50.0)]
+    victim = Job(user="B", cpus=24, work=500,
+                 job_class=JobClass.CHECKPOINTABLE, submit_time=0)
+    claim = Job(user="A", cpus=16, work=5,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=10)
+    cfg = SchedulerConfig(cpu_total=32, quantum=5, cr_overhead=7)
+    res = engine.simulate(users, [victim, claim], cfg, 200,
+                          policy="omfs", backend="python")
+    v = res.sim.state.jobs[victim.id]
+    assert v.n_checkpoints >= 1
+    assert v.overhead == 7 * v.n_checkpoints
+
+
+def test_thrashing_scenario_cost_changes_schedule_and_goodput():
+    """The point of the whole layer: with a slow tier the SCHEDULE (not
+    just the metrics) diverges, goodput drops, wasted work appears, while
+    the free model reproduces the legacy schedule bit-for-bit."""
+    users, jobs = thrashing_scenario(64, quantum=5)
+    free = SchedulerConfig(cpu_total=64, quantum=5)
+    slow = SchedulerConfig(
+        cpu_total=64, quantum=5,
+        cr_cost=CRCostModel(save_mib_per_tick=2048, restore_mib_per_tick=4096))
+    r_free = engine.simulate(users, [j.clone() for j in jobs], free, 400,
+                             policy="omfs", backend="python")
+    r_slow = engine.simulate(users, [j.clone() for j in jobs], slow, 400,
+                             policy="omfs", backend="python")
+    assert r_free.signature() != r_slow.signature()
+    m_free = compute_metrics(r_free.sim)
+    m_slow = compute_metrics(r_slow.sim)
+    assert m_slow.goodput < m_free.goodput
+    assert m_slow.wasted_work_frac > m_free.wasted_work_frac
+    assert m_slow.cr_overhead_units > 0
+    # goodput never exceeds utilization; with nothing wasted it only trails
+    # by the final tick's not-yet-accrued progress
+    assert m_free.wasted_work_frac == 0.0
+    assert m_free.goodput <= m_free.utilization
+    assert m_free.goodput == pytest.approx(m_free.utilization, abs=5e-3)
+    assert m_slow.goodput < m_slow.utilization - 0.02
+
+
+def test_workload_jobs_carry_state_sizes():
+    from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+    spec = WorkloadSpec(n_users=3, horizon=200, seed=5)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)
+    assert jobs and all(j.state_bytes >= MIB for j in jobs)
+    sizes = {j.state_bytes for j in jobs}
+    assert len(sizes) > 1, "state sizes must be heterogeneous"

@@ -180,3 +180,28 @@ def test_cr_overhead_accounting():
                    horizon=400)
     evicted = [x for x in res.state.jobs.values() if x.n_checkpoints > 0]
     assert evicted and all(x.overhead == 7 * x.n_checkpoints for x in evicted)
+
+
+def test_killed_requeue_restart_pays_no_restore_cost():
+    """drop_killed=False restarts a PREEMPTIBLE victim from scratch: there
+    is no snapshot to read, so the size-aware restore cost must NOT be
+    charged (only checkpointed jobs pay at restart)."""
+    from repro.core.crcost import CRCostModel
+
+    st = make_state(cpu_total=16, quantum=0, drop_killed=False, cr_overhead=3,
+                    cr_cost=CRCostModel(save_mib_per_tick=1,
+                                        restore_mib_per_tick=1,
+                                        save_base=2, restore_base=2))
+    victim = run_job(st, user="B", cpus=12, work=100,
+                     job_class=JobClass.PREEMPTIBLE, state_bytes=64 << 20)
+    st.time = 10
+    j = add_job(st, user="A", cpus=8, work=10, job_class=JobClass.CHECKPOINTABLE)
+    dec = runner(st, j)
+    assert dec.admitted and victim.id in dec.killed
+    assert victim.state == JobState.PENDING and victim.progress == 0
+    assert victim.overhead == 0          # neither save nor restore charged
+    # restart it: still nothing (n_checkpoints == 0 -> nothing to restore)
+    st.jobs[j.id].state = JobState.DONE
+    dec2 = runner(st, victim)
+    assert dec2.admitted
+    assert victim.overhead == 0

@@ -1,11 +1,13 @@
 """Property tests: every registered policy's JAX pass is step-equivalent to
 its Python twin through the unified engine, and the incremental-aggregate
-OMFS pass is schedule-identical to the reference pass it optimizes."""
+OMFS pass is schedule-identical to the reference pass it optimizes — with
+and without nonzero, heterogeneous size-aware C/R costs."""
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, omfs_jax
+from repro.core.crcost import CRCostModel
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -31,6 +33,34 @@ def test_policy_python_jax_equivalence(policy, seed, quantum, n_users):
     if not jobs:
         return
     cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=2)
+    py = engine.simulate(users, jobs, cfg, 100,
+                         policy=policy, backend="python")
+    jx = engine.simulate(users, jobs, cfg, 100, policy=policy, backend="jax")
+    assert py.signature() == jx.signature()
+    assert (py.busy_series() == jx.busy_series()).all()
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.integers(0, 12),
+       save_bw=st.integers(64, 8192), restore_bw=st.integers(64, 8192),
+       save_base=st.integers(0, 3), restore_base=st.integers(0, 3))
+def test_policy_equivalence_heterogeneous_cr_costs(
+        policy, seed, quantum, save_bw, restore_bw, save_base, restore_base):
+    """Nonzero, per-job-heterogeneous C/R costs (lognormal state sizes from
+    the workload generator x a randomized cost model): the JAX backend's
+    precomputed cost columns must charge bit-identically to the Python
+    backend's runtime model evaluation, for every registered policy."""
+    users, jobs = _workload(seed, n_users=3)
+    if not jobs:
+        return
+    assert any(j.state_bytes > 0 for j in jobs)
+    model = CRCostModel(save_mib_per_tick=save_bw,
+                        restore_mib_per_tick=restore_bw,
+                        save_base=save_base, restore_base=restore_base,
+                        compress_num=200, compress_den=256)
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=1,
+                          cr_cost=model)
     py = engine.simulate(users, jobs, cfg, 100,
                          policy=policy, backend="python")
     jx = engine.simulate(users, jobs, cfg, 100, policy=policy, backend="jax")
@@ -77,6 +107,23 @@ def test_omfs_incremental_matches_reference_bounded_pass(pass_depth):
     tbl_inc, _ = omfs_jax.simulate_jax(users, jobs, cfg, 80, pass_depth,
                                        incremental=True)
     assert omfs_jax.tables_equal(tbl_ref, tbl_inc)
+
+
+def test_omfs_incremental_matches_reference_with_cost_model():
+    """The incremental pass and the reference pass share the charging
+    primitives, so a nonzero size-aware cost model must not split them."""
+    users, jobs = _workload(seed=5, n_users=3)   # seed 5: >0 checkpoints
+    cfg = SchedulerConfig(
+        cpu_total=32, quantum=4,
+        cr_cost=CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=512,
+                            save_base=2, restore_base=1))
+    tbl_ref, _ = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                       incremental=False)
+    tbl_inc, _ = omfs_jax.simulate_jax(users, jobs, cfg, 100,
+                                       incremental=True)
+    assert omfs_jax.tables_equal(tbl_ref, tbl_inc)
+    assert int(np.asarray(tbl_inc.overhead).sum()) > 0, \
+        "cost model never charged anything — scenario too tame to test"
 
 
 def test_omfs_incremental_matches_reference_beyond_paper_flags():
