@@ -19,7 +19,7 @@ import jax
 
 from benchmarks.common import emit, write_rows
 from repro.core import omfs_jax
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -41,16 +41,21 @@ def _workload(n_jobs: int, cpu_total: int, n_users: int = 16,
     return users, jobs
 
 
-def _time_jax(users, jobs, cfg, horizon, pass_depth, incremental):
-    # warm up with the same shapes so compilation stays out of the timing
+def _time_jax(users, jobs, cfg, horizon, pass_depth, incremental, reps=5):
+    # warm up with the same shapes so compilation stays out of the timing;
+    # best-of-`reps` so the CI regression gate compares stable numbers
     _, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth,
                                     incremental=incremental)
     jax.block_until_ready(busy)
-    t0 = time.perf_counter()
-    tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon, pass_depth,
-                                      incremental=incremental)
-    jax.block_until_ready(busy)
-    return tbl, busy, time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        tbl, busy = omfs_jax.simulate_jax(users, jobs, cfg, horizon,
+                                          pass_depth,
+                                          incremental=incremental)
+        jax.block_until_ready(busy)
+        best = min(best, time.perf_counter() - t0)
+    return tbl, busy, best
 
 
 def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
@@ -58,9 +63,11 @@ def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
     cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
 
     if n_jobs <= 400:  # Python reference gets slow fast
-        t0 = time.perf_counter()
-        simulate(users, [j.clone() for j in jobs], cfg, horizon)
-        t_py = time.perf_counter() - t0
+        t_py = float("inf")
+        for _ in range(5):   # best-of-5: this row anchors the CI gate
+            t0 = time.perf_counter()
+            simulate(users, [j.clone() for j in jobs], cfg, horizon)
+            t_py = min(t_py, time.perf_counter() - t0)
         emit(f"sched_scale/python_{n_jobs}jobs_ticks_per_s",
              horizon / t_py, f"cpus={cpu_total}")
 
@@ -92,6 +99,25 @@ def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
          f"rel_to_free={t_inc / t_cost:.3f};"
          f"(>=0.9 keeps the cost model inside the perf budget)")
 
+    # tiered eviction placement enabled: the per-victim placement lax.scan
+    # runs ONLY on the eviction branch, so tick throughput must stay close
+    # to the flat cost model's.
+    cfg_tiered = SchedulerConfig(
+        cpu_total=cpu_total, quantum=10,
+        cr_tiers=TieredCRCostModel(
+            tiers=(CRCostModel(save_mib_per_tick=4096,
+                               restore_mib_per_tick=8192,
+                               save_base=1, restore_base=1),
+                   CRCostModel(save_mib_per_tick=512,
+                               restore_mib_per_tick=1024,
+                               save_base=2, restore_base=2)),
+            capacity_mib=(16 << 10, UNBOUNDED)))
+    _, _, t_tier = _time_jax(users, jobs, cfg_tiered, horizon, pass_depth, True)
+    emit(f"sched_scale/jax_tiered_{n_jobs}jobs_ticks_per_s",
+         horizon / t_tier,
+         f"rel_to_costmodel={t_cost / t_tier:.3f};"
+         f"(placement scan confined to the eviction branch)")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -103,7 +129,9 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.smoke:
-        cases = ((64, 128, None, 40),)
+        # 200 ticks: long enough that the timed region dominates timer and
+        # dispatch noise — the bench-regression gate needs stable rows
+        cases = ((64, 128, None, 200),)
     else:
         cases = [(100, 256, None, 200), (400, 1024, 64, 200),
                  (2000, 4096, 64, 200), (10_000, 8192, 64, 100)]

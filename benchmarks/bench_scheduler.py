@@ -9,6 +9,10 @@
 * thrashing — the size-aware C/R cost model (core.crcost) materially
   changing the schedule: goodput vs utilization under free / NVM-fast /
   disk-slow tiers on the same eviction ping-pong workload.
+* tier placement — the tiered eviction-placement subsystem
+  (core.crcost.TieredCRCostModel): a fast-tier capacity sweep showing
+  placement-aware preemption recovering the goodput a single slow tier
+  loses, plus the size-aware `omfs_cheap_victim` policy variant.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ import numpy as np
 from benchmarks.common import emit, write_rows
 from repro.core import engine
 from repro.core.baselines import ALL_BASELINES
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
 from repro.core.metrics import compute_metrics
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
@@ -117,12 +121,22 @@ def bench_policy_matrix(horizon: int = 400) -> None:
         cr_cost=CRCostModel(save_mib_per_tick=512, restore_mib_per_tick=1024))
 
     rows = []
-    for name in engine.POLICIES:
+    names = list(engine.POLICIES)
+    # every policy's JAX run shares ONE compiled scan (the policy is a
+    # lax.switch index) instead of compiling a fresh scan per policy —
+    # engine.simulate_matrix; results stay bit-identical to per-policy
+    # engine.simulate(backend="jax")
+    jax_results = {r.policy: r for r in engine.simulate_matrix(
+        users, jobs, cfg, spec.horizon, names)}
+    for name in names:
         for backend in ("python", "jax"):
             # engine.simulate never mutates its input jobs (python clones,
             # jax only reads), so the same list serves every iteration
-            res = engine.simulate(users, jobs, cfg,
-                                  spec.horizon, policy=name, backend=backend)
+            if backend == "jax":
+                res = jax_results[name]
+            else:
+                res = engine.simulate(users, jobs, cfg, spec.horizon,
+                                      policy=name, backend=backend)
             s = res.summary()
             rows.append(s)
             emit(f"policy_matrix/{name}_{backend}_util", s["utilization"],
@@ -131,7 +145,8 @@ def bench_policy_matrix(horizon: int = 400) -> None:
                  f"ckpt={s['checkpoints']};killed={s['killed']}")
 
     hdr = ("policy", "backend", "utilization", "goodput", "wasted_frac",
-           "mean_wait", "preemptions", "checkpoints", "killed", "done")
+           "mean_wait", "preemptions", "checkpoints", "spills", "killed",
+           "done")
     widths = [max(len(h), 12) for h in hdr]
     print("\n" + "  ".join(h.ljust(w) for h, w in zip(hdr, widths)))
     for s in rows:
@@ -168,6 +183,66 @@ def bench_thrashing(horizon: int = 400) -> None:
              "the measured thrashing-cost term")
 
 
+# fast NVM-like tier vs a slow durable disk tier (same models as
+# bench_thrashing so the sweep endpoints are directly comparable)
+_FAST = CRCostModel(save_mib_per_tick=16384, restore_mib_per_tick=32768)
+_DISK = CRCostModel(save_mib_per_tick=2048, restore_mib_per_tick=4096)
+
+
+def bench_tier_placement(horizon: int = 400) -> None:
+    """Fast-tier capacity sweep on the thrashing scenario: with 0 MiB of
+    fast tier every checkpoint spills to disk (= the single-tier disk
+    model); each capacity step lets more of the eviction ping-pong land on
+    the fast tier, recovering goodput — placement-aware preemption is
+    where the utilization gain actually comes from.  Also measures the
+    size-aware `omfs_cheap_victim` victim order against the faithful one
+    on the same heterogeneous flood."""
+    # heterogeneous flood: snapshots of 16..128 GiB compete for capacity
+    gibs = (128, 64, 32, 16)
+    total_mib = sum(g << 10 for g in gibs)
+
+    def run(policy, cfg):
+        users, jobs = thrashing_scenario(64, quantum=5, state_gibs=gibs)
+        res = engine.simulate(users, jobs, cfg, horizon,
+                              policy=policy, backend="python")
+        return res.summary()
+
+    single = run("omfs", SchedulerConfig(cpu_total=64, quantum=5,
+                                         cr_cost=_DISK))
+    emit("tier_placement/single_disk_goodput", single["goodput"],
+         f"util={single['utilization']:.3f};the no-placement baseline")
+
+    goodput_at = {}
+    for frac, cap in (("0", 0), ("quarter", total_mib // 4),
+                      ("half", total_mib // 2), ("all", total_mib),
+                      ("unbounded", UNBOUNDED)):
+        tiers = TieredCRCostModel(tiers=(_FAST, _DISK),
+                                  capacity_mib=(cap, UNBOUNDED))
+        cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_tiers=tiers)
+        s = run("omfs", cfg)
+        goodput_at[frac] = s["goodput"]
+        emit(f"tier_placement/capacity_{frac}_goodput", s["goodput"],
+             f"cap_mib={cap};util={s['utilization']:.3f};"
+             f"ckpt={s['checkpoints']};spills={s['spills']}")
+        # size-aware victim selection on the same tiered machine
+        c = run("omfs_cheap_victim", cfg)
+        emit(f"tier_placement/capacity_{frac}_cheap_victim_goodput",
+             c["goodput"],
+             f"vs_faithful={c['goodput'] - s['goodput']:+.3f};"
+             f"ckpt={c['checkpoints']};spills={c['spills']}")
+
+    # the headline claims, asserted (the CI gate also tracks the values):
+    # zero fast capacity degenerates to the single-tier disk model, and
+    # ANY fast capacity only improves on it
+    assert abs(goodput_at["0"] - single["goodput"]) < 1e-9, \
+        "cap=0 tiered placement must degenerate to the single-tier model"
+    assert all(g >= single["goodput"] - 1e-9 for g in goodput_at.values()), \
+        "tiered placement regressed goodput vs the single-tier disk model"
+    emit("tier_placement/goodput_recovered_all_vs_disk",
+         goodput_at["all"] - single["goodput"],
+         "what placing the ping-pong on the fast tier buys")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -180,6 +255,7 @@ def main(argv=None) -> None:
         # only drops once jobs run past their base work) — still a 16-job
         # Python sim, seconds even on CI
         bench_thrashing(horizon=400)
+        bench_tier_placement(horizon=400)
     else:
         bench_utilization()
         bench_reclaim_latency()
@@ -187,6 +263,7 @@ def main(argv=None) -> None:
         bench_quantum()
         bench_policy_matrix()
         bench_thrashing()
+        bench_tier_placement()
     write_rows("scheduler")
 
 

@@ -1,0 +1,180 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against the committed
+baseline and fail CI on a >20% regression.
+
+The benchmarks already emit their rows to ``BENCH_<bench>.json``
+(`benchmarks.common.write_rows`) and CI uploads them as artifacts — but
+until this gate nothing *read* them.  Now the perf trajectory is locked:
+
+* ``python -m benchmarks.compare_bench`` — compare every gated row in
+  ``benchmarks/BENCH_baseline.json`` against the fresh files in the CWD;
+  exit 1 if any regresses by more than its tolerance.  A trajectory table
+  is printed, and appended to ``$GITHUB_STEP_SUMMARY`` when set.
+* ``python -m benchmarks.compare_bench --write-baseline`` — regenerate the
+  baseline from the fresh files (run the smoke benches first).  Do this
+  deliberately, in the PR that changes the performance story.
+
+Gated rows are higher-is-better (tick throughput, goodput, speedups).
+Absolute ticks/second are machine-dependent, so throughput rows are
+normalized by an ANCHOR row before comparison — the pure-Python
+reference-backend throughput measured in the same run, which scales with
+host speed the same way the JAX rows do.  Goodput/ratio rows are
+deterministic and compare raw.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
+
+#: the machine-speed anchor: python-backend scheduler ticks/second
+ANCHOR = "sched_scale/python_64jobs_ticks_per_s"
+DEFAULT_RTOL = 0.20
+
+#: (substring, normalize_by_anchor) — which fresh rows become gated
+#: baseline entries.  Throughput rows normalize; quality rows compare raw.
+GATED_PATTERNS = (
+    ("_ticks_per_s", True),
+    ("incremental_speedup", False),
+    ("goodput", False),
+    ("policy_matrix/omfs_jax_util", False),
+)
+#: rows that are deltas/drops (lower magnitude is fine) — never gated
+EXCLUDE_SUBSTRINGS = ("goodput_drop", "goodput_recovered")
+
+
+def load_fresh(patterns=("BENCH_*.json",)) -> Dict[str, float]:
+    rows: Dict[str, float] = {}
+    for pat in patterns:
+        for path in sorted(glob.glob(pat)):
+            if os.path.abspath(path) == os.path.abspath(BASELINE_PATH):
+                continue
+            with open(path) as f:
+                for row in json.load(f):
+                    rows[row["name"]] = float(row["value"])
+    return rows
+
+
+def make_baseline(fresh: Dict[str, float]) -> List[dict]:
+    entries = []
+    for name, value in sorted(fresh.items()):
+        if any(x in name for x in EXCLUDE_SUBSTRINGS):
+            continue
+        for pat, normalize in GATED_PATTERNS:
+            if pat in name and name != ANCHOR:
+                entries.append({
+                    "name": name,
+                    "value": value,
+                    "rtol": DEFAULT_RTOL,
+                    "normalize_by": ANCHOR if normalize else None,
+                })
+                break
+    anchor = fresh.get(ANCHOR)
+    if anchor is None:
+        raise SystemExit(f"anchor row {ANCHOR!r} missing — run "
+                         "bench_sched_scale --smoke first")
+    return [{"name": ANCHOR, "value": anchor, "rtol": None,
+             "normalize_by": None}] + entries
+
+
+def compare(baseline: List[dict], fresh: Dict[str, float]):
+    """Returns (table rows, failures).  A gated row regresses when its
+    (possibly anchor-normalized) fresh value drops more than ``rtol``
+    below the same normalization of the baseline value."""
+    base_by_name = {e["name"]: e for e in baseline}
+    anchor_base = base_by_name.get(ANCHOR, {}).get("value")
+    anchor_fresh = fresh.get(ANCHOR)
+
+    table, failures = [], []
+    for entry in baseline:
+        name, rtol = entry["name"], entry["rtol"]
+        base = entry["value"]
+        cur: Optional[float] = fresh.get(name)
+        if cur is None:
+            table.append((name, base, None, None, "MISSING"))
+            # a missing ANCHOR row (rtol None) also fails: without it every
+            # normalized throughput row would silently stop being gated
+            failures.append(f"{name}: row missing from fresh results")
+            continue
+        b, c = base, cur
+        if entry.get("normalize_by"):
+            if not anchor_base or not anchor_fresh:
+                table.append((name, base, cur, None, "NO-ANCHOR"))
+                failures.append(
+                    f"{name}: anchor row unavailable, gate cannot run")
+                continue
+            b, c = base / anchor_base, cur / anchor_fresh
+        delta = (c - b) / b if b else 0.0
+        if rtol is None:
+            status = "anchor"
+        elif delta < -rtol:
+            status = "REGRESSED"
+            failures.append(
+                f"{name}: {c:.4g} vs baseline {b:.4g} "
+                f"({delta:+.1%}, tolerance -{rtol:.0%})")
+        else:
+            status = "ok"
+        table.append((name, base, cur, delta, status))
+    return table, failures
+
+
+def render(table, failures) -> str:
+    lines = ["| benchmark | baseline | current | delta | status |",
+             "|---|---|---|---|---|"]
+    for name, base, cur, delta, status in table:
+        cur_s = f"{cur:.4g}" if cur is not None else "—"
+        delta_s = f"{delta:+.1%}" if delta is not None else "—"
+        mark = "❌" if status in ("REGRESSED", "MISSING", "NO-ANCHOR") \
+            else "✅"
+        lines.append(f"| `{name}` | {base:.4g} | {cur_s} | {delta_s} "
+                     f"| {mark} {status} |")
+    verdict = (f"**{len(failures)} benchmark regression(s) beyond "
+               "tolerance**" if failures else
+               "**no benchmark regressions beyond tolerance**")
+    return "\n".join(["## Bench trajectory", ""] + lines + ["", verdict, ""])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate benchmarks/BENCH_baseline.json from "
+                         "the fresh BENCH_*.json files in the CWD")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args(argv)
+
+    fresh = load_fresh()
+    if not fresh:
+        print("no BENCH_*.json found in the CWD — run the smoke benches")
+        return 2
+
+    if args.write_baseline:
+        entries = make_baseline(fresh)
+        with open(args.baseline, "w") as f:
+            json.dump(entries, f, indent=1)
+        print(f"wrote {args.baseline} ({len(entries)} rows, "
+              f"anchor={ANCHOR})")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    table, failures = compare(baseline, fresh)
+    report = render(table, failures)
+    print(report)
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report + "\n")
+
+    if failures:
+        print("FAIL: " + "; ".join(failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,6 +105,13 @@ class CheckpointManager:
         late), so timed callers drain first — see CheckpointService."""
         self._async.wait()
 
+    @property
+    def fast_capacity_mib(self) -> int:
+        """MemTier capacity on the scheduler's whole-MiB grid (floor: the
+        simulator must never place more than the real tier can hold) —
+        feeds `TieredCRCostModel.from_stats` via the service facade."""
+        return self.mem.capacity >> 20
+
     # -- restore -------------------------------------------------------------
     def names(self):
         """Every restorable snapshot: fast tier, durable tier, delta chain."""

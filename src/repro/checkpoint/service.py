@@ -22,7 +22,12 @@ import time
 from typing import Dict, Optional, Tuple
 
 from repro.checkpoint.manager import CheckpointManager, ManagerConfig
-from repro.core.crcost import CRCostModel, DEFAULT_CAP_TICKS
+from repro.core.crcost import (
+    DEFAULT_CAP_TICKS,
+    UNBOUNDED,
+    CRCostModel,
+    TieredCRCostModel,
+)
 
 
 @dataclasses.dataclass
@@ -110,6 +115,24 @@ class CheckpointService:
             self.stats(), tick_seconds=tick_seconds,
             compress_ratio=compress_ratio, save_base=save_base,
             restore_base=restore_base, cap_ticks=cap_ticks)
+
+    def calibrate_tiered(self, tick_seconds: float, *,
+                         compress_ratio: float = 1.0,
+                         cap_ticks: int = DEFAULT_CAP_TICKS,
+                         ) -> TieredCRCostModel:
+        """Per-tier measured traffic -> a tiered placement model.
+
+        Tier 0 is the MemTier (fast, capacity-bounded at the manager's
+        real ``mem_capacity_bytes`` on the whole-MiB grid), tier 1 the
+        DiskTier (durable, the UNBOUNDED spill target) — exactly the pair
+        `CheckpointManager.durable_every` alternates between.  A tier with
+        no measured save traffic inherits the fastest measured tier's
+        model; requires at least one measured save somewhere."""
+        ts = self.tier_stats()
+        return TieredCRCostModel.from_stats(
+            [ts["mem"], ts["disk"]], tick_seconds=tick_seconds,
+            capacity_mib=(self.manager.fast_capacity_mib, UNBOUNDED),
+            compress_ratio=compress_ratio, cap_ticks=cap_ticks)
 
     def close(self) -> None:
         self.manager.close()

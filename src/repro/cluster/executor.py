@@ -37,8 +37,9 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, ManagerConfig
 from repro.checkpoint.service import CheckpointService, CRStats
+from repro.checkpoint.tiers import TierStats
 from repro.core import engine
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
 from repro.core.omfs import scheduler_pass
 from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
 from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
@@ -228,6 +229,39 @@ class ClusterExecutor:
         if not ts:
             raise ValueError("calibrate() needs tick_seconds")
         return CRCostModel.from_stats(self.cr_stats(), tick_seconds=ts, **kw)
+
+    def tier_stats(self) -> Dict[str, TierStats]:
+        """Fleet-wide per-tier traffic: every managed `CheckpointService`'s
+        MemTier/DiskTier counters summed (the split `calibrate_tiered`
+        prices the tiers from)."""
+        agg = {"mem": TierStats(), "disk": TierStats()}
+        for mj in self.jobs.values():
+            if isinstance(mj.ckpt, CheckpointService):
+                for key, st in mj.ckpt.tier_stats().items():
+                    a = agg[key]
+                    for f in dataclasses.fields(TierStats):
+                        setattr(a, f.name,
+                                getattr(a, f.name) + getattr(st, f.name))
+        return agg
+
+    def calibrate_tiered(self, tick_seconds: Optional[float] = None,
+                         **kw) -> TieredCRCostModel:
+        """A `TieredCRCostModel` from the fleet's measured per-tier traffic
+        — the eviction-placement twin of `calibrate()`.  The fast-tier
+        capacity is the smallest MemTier across managed jobs (conservative:
+        the simulator never places more than the tightest real host holds)."""
+        ts = tick_seconds if tick_seconds is not None else self.tick_seconds
+        if not ts:
+            raise ValueError("calibrate_tiered() needs tick_seconds")
+        caps = [mj.ckpt.manager.fast_capacity_mib
+                for mj in self.jobs.values()
+                if isinstance(mj.ckpt, CheckpointService)]
+        if not caps:
+            raise ValueError("no managed CheckpointService to calibrate from")
+        stats = self.tier_stats()
+        return TieredCRCostModel.from_stats(
+            [stats["mem"], stats["disk"]], tick_seconds=ts,
+            capacity_mib=(min(caps), UNBOUNDED), **kw)
 
 
 def small_train_job(tmpdir: Path, *, arch_cfg, vocab=None, seq=64, batch=8,

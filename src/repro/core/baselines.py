@@ -15,6 +15,12 @@ each policy on the *same* workload:
   estimates are unreliable; we expose an estimate-error knob).
 * ``backfill_cr``      — Niu et al. [30]: backfill + checkpoint-preemption
   of backfilled jobs when the head job becomes runnable.
+
+C/R pricing — including tiered eviction placement (``cfg.cr_tiers``:
+greedy cheapest-feasible tier choice with durable spill, the restore
+priced at the placed tier) — rides the shared `omfs._evict` / `omfs._start`
+helpers, so every baseline pays the same size- and tier-aware costs as
+OMFS with no policy-specific code here (DESIGN.md §Tier placement).
 """
 from __future__ import annotations
 

@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Sequence, Tuple
 
 MIB = 1 << 20
 #: Largest checkpoint image the model distinguishes (1 TiB).  Beyond this
@@ -231,3 +231,114 @@ class CRCostModel:
         if seconds <= 0 or tick_seconds <= 0:
             return 0
         return int(math.ceil(seconds / tick_seconds))
+
+
+#: `TieredCRCostModel.capacity_mib` convention: a negative capacity means
+#: "unbounded" (the durable/spill tier); 0 means the tier holds nothing.
+UNBOUNDED = -1
+
+
+@dataclass(frozen=True)
+class TieredCRCostModel:
+    """A bank of per-tier C/R cost models with capacities — mem vs. disk.
+
+    Mirrors the real checkpoint subsystem (`checkpoint.manager`): tier 0 is
+    the fast tier (MemTier, capacity-bounded like DCPMM), the last tier is
+    the durable spill target (DiskTier, unbounded).  Each eviction *places*
+    the victim's snapshot on a tier — greedy cheapest-feasible, see
+    ``choose_tier`` — and the chosen tier prices both the save (charged at
+    eviction) and the later restore (charged at restart).  This replaces
+    the single-tier assumption of `SchedulerConfig.cr_cost` when set as
+    ``SchedulerConfig.cr_tiers`` (which then takes precedence).
+
+    Determinism rules (cross-backend bit-equality, same as `CRCostModel`):
+
+    * ``capacity_mib`` entries are integers on the same whole-MiB grid as
+      ``state_mib_of``; negative = ``UNBOUNDED``, 0 = holds nothing;
+    * occupancy of a tier is the sum of ``state_mib`` over jobs currently
+      *holding* a snapshot there (evicted-and-pending); a restore consumes
+      the snapshot (the slot frees when the job restarts);
+    * placement is greedy in victim order: earlier victims claim capacity
+      first, later ones spill — both backends walk victims in the same
+      order, so placements agree by construction.
+
+    Hashable (frozen, tuple fields) on purpose: it rides `SchedulerConfig`,
+    a static jit argument and compilation-cache key.
+    """
+
+    tiers: Tuple[CRCostModel, ...]
+    capacity_mib: Tuple[int, ...]
+
+    def __post_init__(self):
+        assert len(self.tiers) >= 1
+        assert len(self.tiers) == len(self.capacity_mib), \
+            "one capacity per tier"
+        assert all(isinstance(m, CRCostModel) for m in self.tiers)
+        assert self.capacity_mib[-1] < 0, \
+            "the last tier is the spill target and must be UNBOUNDED (<0)"
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    def save_cost(self, tier: int, state_mib):
+        return self.tiers[tier].save_cost(state_mib)
+
+    def restore_cost(self, tier: int, state_mib):
+        return self.tiers[tier].restore_cost(state_mib)
+
+    def feasible(self, tier: int, state_mib: int, occupied_mib: int) -> bool:
+        cap = self.capacity_mib[tier]
+        return cap < 0 or occupied_mib + state_mib <= cap
+
+    def choose_tier(self, state_mib: int,
+                    occupied_mib: Sequence[int]) -> int:
+        """Greedy cheapest-feasible placement for one eviction.
+
+        Among tiers with room for ``state_mib`` on top of ``occupied_mib``,
+        pick the one with the lowest save cost (ties break toward the
+        lower/faster tier index).  If nothing fits, spill to the last tier
+        (always feasible by the UNBOUNDED invariant)."""
+        best = self.n_tiers - 1
+        best_cost = self.save_cost(best, state_mib)
+        for k in range(self.n_tiers - 1):
+            if not self.feasible(k, state_mib, occupied_mib[k]):
+                continue
+            c = self.save_cost(k, state_mib)
+            if c < best_cost or (c == best_cost and k < best):
+                best, best_cost = k, c
+        return best
+
+    @classmethod
+    def from_stats(cls, tier_stats: Sequence[Any], *, tick_seconds: float,
+                   capacity_mib: Sequence[int],
+                   compress_ratio: float = 1.0,
+                   cap_ticks: int = DEFAULT_CAP_TICKS) -> "TieredCRCostModel":
+        """Calibrate one model per measured tier (mirrors
+        `CheckpointManager`'s MemTier/DiskTier stats pair).
+
+        ``tier_stats`` is a sequence of TierStats-shaped objects, fastest
+        tier first; a tier with no measured save traffic inherits the
+        fastest *measured* tier's model (conservative: never prices an
+        unmeasured tier as free).  ``capacity_mib[-1]`` is forced to
+        UNBOUNDED — the durable tier is the spill target."""
+        models = []
+        fallback = None
+        for st in tier_stats:
+            saved = getattr(st, "bytes_saved", None)
+            if saved is None:
+                saved = getattr(st, "bytes_written", 0)
+            if saved and getattr(st, "save_seconds", 0.0) > 0:
+                m = CRCostModel.from_stats(
+                    st, tick_seconds=tick_seconds,
+                    compress_ratio=compress_ratio, cap_ticks=cap_ticks)
+                if fallback is None:
+                    fallback = m
+            else:
+                m = None
+            models.append(m)
+        if fallback is None:
+            raise ValueError("no tier has measured save traffic")
+        tiers = tuple(m if m is not None else fallback for m in models)
+        caps = tuple(int(c) for c in capacity_mib[:-1]) + (UNBOUNDED,)
+        return cls(tiers=tiers, capacity_mib=caps)

@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core import omfs_jax, policies_jax
 from repro.core.baselines import ALL_BASELINES
-from repro.core.omfs import Decision, scheduler_pass
+from repro.core.omfs import Decision, cheap_victim_pass, scheduler_pass
 from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
 
 PythonPolicy = Callable[[ClusterState], List[Decision]]
@@ -67,6 +67,12 @@ def register_policy(name: str, python_pass: PythonPolicy,
 
 register_policy("omfs", scheduler_pass,
                 lambda pass_depth=None: omfs_jax.make_omfs_pass(pass_depth))
+# beyond-paper OMFS variant: size-aware victim selection — evict the
+# cheapest-to-checkpoint victims first (DESIGN.md §Tier placement)
+register_policy(
+    "omfs_cheap_victim", cheap_victim_pass,
+    lambda pass_depth=None: omfs_jax.make_omfs_pass(pass_depth,
+                                                    cheap_victims=True))
 for _name, _factory in policies_jax.JAX_BASELINES.items():
     register_policy(_name, ALL_BASELINES[_name], _factory)
 
@@ -148,6 +154,16 @@ def tick_jax(cfg: SchedulerConfig, ent: jax.Array, tbl: "omfs_jax.JobTable",
     return policy_pass(cfg, ent, t, tbl)
 
 
+def _tick_step(cfg: SchedulerConfig, ent: jax.Array,
+               tbl: "omfs_jax.JobTable", t: jax.Array, pass_fn: JaxPass):
+    """One scan step shared by BOTH jitted runners (per-policy and matrix):
+    the tick plus the per-tick busy reduction (protocol step 4) — defined
+    once so `simulate` and `simulate_matrix` cannot drift apart."""
+    tbl = tick_jax(cfg, ent, tbl, t, pass_fn)
+    busy = jnp.sum(jnp.where(tbl.state == omfs_jax.RUNNING, tbl.cpus, 0))
+    return tbl, busy
+
+
 @functools.lru_cache(maxsize=128)
 def _jitted_runner(cfg: SchedulerConfig, pass_fn: JaxPass, horizon: int):
     """One jitted scan per (cfg, pass, horizon): repeated `simulate` calls
@@ -157,10 +173,7 @@ def _jitted_runner(cfg: SchedulerConfig, pass_fn: JaxPass, horizon: int):
     @jax.jit
     def run(tbl, ent):
         def step(tbl, t):
-            tbl = tick_jax(cfg, ent, tbl, t, pass_fn)
-            busy = jnp.sum(jnp.where(tbl.state == omfs_jax.RUNNING,
-                                     tbl.cpus, 0))
-            return tbl, busy
+            return _tick_step(cfg, ent, tbl, t, pass_fn)
 
         return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
 
@@ -256,6 +269,7 @@ class EngineResult:
             waits = [j.first_start - j.submit_time for j in started]
             preempt = sum(j.n_preemptions for j in jobs)
             ckpt = sum(j.n_checkpoints for j in jobs)
+            spills = sum(j.n_spills for j in jobs)
             killed = sum(1 for j in jobs if j.state == JobState.KILLED)
             done = sum(1 for j in jobs if j.state == JobState.DONE)
             was_killed = np.asarray(
@@ -269,6 +283,7 @@ class EngineResult:
             waits = (t.first_start - t.submit)[started]
             preempt = int(t.n_preempt.sum())
             ckpt = int(t.n_ckpt.sum())
+            spills = int(t.n_spill.sum())
             killed = int((t.state == omfs_jax.KILLED).sum())
             done = int((t.state == omfs_jax.DONE).sum())
             was_killed = np.asarray(t.state) == omfs_jax.KILLED
@@ -291,6 +306,7 @@ class EngineResult:
             "mean_wait": float(np.mean(waits)) if len(waits) else 0.0,
             "preemptions": preempt,
             "checkpoints": ckpt,
+            "spills": spills,        # checkpoints placed beyond the fast tier
             "killed": killed,
             "done": done,
         }
@@ -362,3 +378,65 @@ def simulate(
             busy=np.asarray(busy))
 
     raise ValueError(f"unknown backend {backend!r}; use 'python' or 'jax'")
+
+
+# ---------------------------------------------------------------------------
+# Multi-policy matrix runner: ONE compiled scan shared by every policy
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_matrix_runner(cfg: SchedulerConfig, pass_fns: tuple, horizon: int):
+    """One jitted scan whose tick ``lax.switch``es over the policy passes.
+
+    Compiling the union program once and selecting the policy by a dynamic
+    index is measurably cheaper than compiling one scan per policy (the
+    tick protocol, table plumbing, and XLA fixed costs are shared) — this
+    is what keeps `bench_scheduler --smoke`'s policy matrix off the CI
+    critical path."""
+
+    @jax.jit
+    def run(tbl, ent, pidx):
+        def step(tbl, t):
+            branches = [
+                lambda tb, p=p: _tick_step(cfg, ent, tb, t, p)
+                for p in pass_fns
+            ]
+            return jax.lax.switch(pidx, branches, tbl)
+
+        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
+
+    return run
+
+
+def simulate_matrix(
+    users: List[User],
+    jobs: List[Job],
+    config: SchedulerConfig,
+    horizon: int,
+    policies: Optional[List[str]] = None,
+    *,
+    pass_depth: Optional[int] = None,
+) -> List[EngineResult]:
+    """Run many registered policies on the JAX backend through one shared
+    compiled scan (see `_jitted_matrix_runner`); per-policy results are
+    bit-identical to ``simulate(..., backend="jax")`` — the policy pass is
+    selected by ``lax.switch`` index, everything else is the same program.
+    """
+    names = list(policies) if policies is not None else sorted(POLICIES)
+    unknown = [n for n in names if n not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown}; known: {sorted(POLICIES)}")
+    pass_fns = tuple(POLICIES[n].jax_factory(pass_depth) for n in names)
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, config.cpu_total, config)
+    if tbl.cpus.shape[0] == 0:
+        busy = jnp.zeros((horizon,), jnp.int32)
+        return [EngineResult(policy=n, backend="jax", config=config,
+                             table=tbl, busy=np.asarray(busy)) for n in names]
+    run = _jitted_matrix_runner(config, pass_fns, horizon)
+    out = []
+    for k, name in enumerate(names):
+        final, busy = run(tbl, ent, k)
+        out.append(EngineResult(policy=name, backend="jax", config=config,
+                                table=final, busy=np.asarray(busy)))
+    return out

@@ -27,6 +27,7 @@ class Metrics:
     killed_jobs: int
     preemptions: int
     checkpoints: int
+    spilled_checkpoints: int             # placed beyond the fast tier (cr_tiers)
     cr_overhead_units: int               # work units burned by C/R
     goodput: float                       # useful cpu-ticks / machine capacity
     wasted_work_frac: float              # executed cpu-ticks lost to C/R + kills
@@ -113,6 +114,7 @@ def compute_metrics(result: SimResult) -> Metrics:
         killed_jobs=sum(1 for j in jobs if j.state == JobState.KILLED),
         preemptions=sum(j.n_preemptions for j in jobs),
         checkpoints=sum(j.n_checkpoints for j in jobs),
+        spilled_checkpoints=sum(j.n_spills for j in jobs),
         cr_overhead_units=sum(j.overhead for j in jobs),
         goodput=goodput,
         wasted_work_frac=wasted_frac,

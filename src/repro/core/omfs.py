@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
-from repro.core.queues import sorted_pending, sorted_victims
+from repro.core.queues import cheap_victim_key, sorted_pending, sorted_victims
 from repro.core.types import ClusterState, Job, JobClass, JobState
 
 
@@ -42,14 +42,30 @@ class Decision:
 def _start(state: ClusterState, job: Job) -> None:
     if job.n_checkpoints > 0:
         # transparent restore from the latest snapshot: charge the
-        # size-dependent read cost (restart after a kill with
-        # drop_killed=False restarts from scratch -> n_checkpoints == 0,
-        # nothing to restore, nothing charged)
-        job.overhead += state.config.cr_cost.restore_cost(job.state_mib)
+        # size-dependent read cost of the tier the snapshot was PLACED on
+        # at eviction (restart after a kill with drop_killed=False restarts
+        # from scratch -> n_checkpoints == 0, nothing to restore)
+        tier = max(job.ckpt_tier, 0)
+        job.overhead += state.config.restart_restore_cost(job.state_mib, tier)
+    # the restore consumes the snapshot: its tier slot frees for the next
+    # victim (matches omfs_jax.admit_job clearing ckpt_tier)
+    job.ckpt_tier = -1
     job.state = JobState.RUNNING
     job.run_start = state.time
     if job.first_start < 0:
         job.first_start = state.time
+
+
+def _tier_occupancy(state: ClusterState) -> List[int]:
+    """MiB of snapshot state currently held per tier: evicted-and-pending
+    jobs whose latest checkpoint was placed there.  Recomputed per eviction
+    in this reference backend (O(J)); the JAX twin folds the same sum into
+    the eviction branch (`omfs_jax.apply_evictions`)."""
+    occ = [0] * state.config.cr_tiers.n_tiers
+    for j in state.jobs.values():
+        if j.state == JobState.PENDING and j.ckpt_tier >= 0:
+            occ[j.ckpt_tier] += j.state_mib
+    return occ
 
 
 def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
@@ -58,9 +74,21 @@ def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
     victim.n_preemptions += 1
     if victim.job_class == JobClass.CHECKPOINTABLE:
         victim.n_checkpoints += 1
-        # snapshot write: legacy flat term + size-dependent save cost
-        victim.overhead += state.config.cr_overhead + \
-            state.config.cr_cost.save_cost(victim.state_mib)
+        # snapshot write: place the image on a tier (greedy cheapest-
+        # feasible, spilling past full tiers), then charge the legacy flat
+        # term + that tier's size-dependent save cost.  Victims evicted
+        # earlier in the same pass already occupy their tier (they are
+        # PENDING by now), so placement is sequential-greedy by construction.
+        tiers = state.config.cr_tiers
+        if tiers is not None:
+            tier = tiers.choose_tier(victim.state_mib, _tier_occupancy(state))
+        else:
+            tier = 0
+        victim.ckpt_tier = tier
+        if tier > 0:
+            victim.n_spills += 1
+        victim.overhead += state.config.eviction_save_cost(
+            victim.state_mib, tier)
         victim.state = JobState.PENDING          # line 35: back to Jobs_Submitted
         # memoryless: re-queued with its original priority; progress is kept
         # (transparent C/R) — the whole point of the paper.
@@ -77,8 +105,14 @@ def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
     victim.run_start = -1
 
 
-def runner(state: ClusterState, job: Job) -> Decision:
-    """MEMORYLESS FAIR-SHARE RUNNER (lines 18-38) for one submitted job."""
+def runner(state: ClusterState, job: Job, *,
+           cheap_victims: bool = False) -> Decision:
+    """MEMORYLESS FAIR-SHARE RUNNER (lines 18-38) for one submitted job.
+
+    ``cheap_victims`` (beyond paper, the `omfs_cheap_victim` policy) orders
+    victims by ``(save_cost, priority, run_start, id)`` instead of the
+    paper's ``(priority, run_start, id)`` — prefer the victims whose
+    checkpoints are cheapest to write."""
     cfg = state.config
     dec = Decision(job_id=job.id, admitted=False, reason="")
 
@@ -104,7 +138,8 @@ def runner(state: ClusterState, job: Job) -> Decision:
         return dec                                            # lines 29-30
 
     # lines 31-36: user is entitled; make room by evicting running jobs
-    victims = sorted_victims(state)
+    victims = sorted_victims(
+        state, key=cheap_victim_key(state) if cheap_victims else None)
     if cfg.victim_filter_over_entitlement:                    # beyond paper
         victims = [
             v for v in victims
@@ -134,7 +169,8 @@ def runner(state: ClusterState, job: Job) -> Decision:
     return dec
 
 
-def scheduler_pass(state: ClusterState) -> List[Decision]:
+def scheduler_pass(state: ClusterState, *,
+                   cheap_victims: bool = False) -> List[Decision]:
     """One sweep of the MEMORYLESS FAIR-SHARE SCHEDULER (lines 14-17).
 
     Tries each pending job once, in submitted-queue order.  Jobs admitted
@@ -145,5 +181,10 @@ def scheduler_pass(state: ClusterState) -> List[Decision]:
     for job in sorted_pending(state):
         if job.state != JobState.PENDING:      # may have been evicted/killed
             continue
-        decisions.append(runner(state, job))
+        decisions.append(runner(state, job, cheap_victims=cheap_victims))
     return decisions
+
+
+def cheap_victim_pass(state: ClusterState) -> List[Decision]:
+    """`omfs_cheap_victim`: Algorithm 1 with size-aware victim selection."""
+    return scheduler_pass(state, cheap_victims=True)

@@ -32,6 +32,18 @@ the shared primitives charge them — `apply_evictions` adds the save cost to
 each checkpointed victim, `admit_job` adds the restore cost when a job with
 an existing checkpoint restarts.  Both are O(1) scatters, so the
 non-eviction fast path does no extra O(J) work.
+
+Tiered eviction placement (`SchedulerConfig.cr_tiers`,
+`core.crcost.TieredCRCostModel`): the table additionally carries the
+durable-tier cost columns (``cost_save2``/``cost_restore2``) and the
+runtime ``ckpt_tier`` column recording where each pending job's latest
+snapshot lives.  `apply_evictions` places each victim greedily (cheapest
+feasible tier, spilling when the capacity-bounded fast tier is full) with
+a short ``lax.scan`` in victim order — confined to the eviction branch, so
+the admit fast path stays O(1) — and `admit_job` charges the restore cost
+of the *placed* tier, then frees the slot.  Sizes may change at runtime
+via `update_state_mib` (O(1) scatters recomputing the cost columns with
+the same arithmetic, no re-trace of the jitted scan).
 """
 from __future__ import annotations
 
@@ -41,7 +53,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import MAX_STATE_MIB
 from repro.core.types import JobClass, SchedulerConfig
 
 # JobState encoding (matches types.JobState)
@@ -61,11 +73,16 @@ class JobTable(NamedTuple):
     jclass: jax.Array      # int32 JobClass
     submit: jax.Array      # int32 tick
     state_mib: jax.Array   # int32 checkpoint image size (MiB)
-    # C/R costs precomputed from (cfg.cr_cost, cfg.cr_overhead, state_mib):
-    # sizes are static per job, so the model evaluates once at table build
-    # and the passes pay only an O(1) gather per charge
+    # C/R costs precomputed from (cfg.cr_cost / cr_tiers, cfg.cr_overhead,
+    # state_mib): sizes are static per job (until `update_state_mib`), so
+    # the model evaluates once at table build and the passes pay only an
+    # O(1) gather per charge.  cost_save/cost_restore price the FAST tier
+    # (tier 0); cost_save2/cost_restore2 price the DURABLE spill tier
+    # (tier 1) and alias tier 0 when no tiered model is configured.
     cost_save: jax.Array       # int32 work units charged per checkpoint
     cost_restore: jax.Array    # int32 work units charged per restore
+    cost_save2: jax.Array      # int32 durable-tier save cost
+    cost_restore2: jax.Array   # int32 durable-tier restore cost
     # runtime
     state: jax.Array       # int32 JobState
     progress: jax.Array
@@ -76,6 +93,8 @@ class JobTable(NamedTuple):
     n_ckpt: jax.Array
     overhead: jax.Array
     backfilled: jax.Array  # int32 0/1: ever admitted by queue-jumping
+    ckpt_tier: jax.Array   # int32 tier holding the latest snapshot (-1: none)
+    n_spill: jax.Array     # int32 checkpoints placed beyond the fast tier
 
 
 def table_from_jobs(jobs, users, cpu_total: int,
@@ -93,8 +112,15 @@ def table_from_jobs(jobs, users, cpu_total: int,
     uidx = {u.name: i for i, u in enumerate(users)}
     j = sorted(jobs, key=lambda x: x.id)
     n = len(j)
-    model = config.cr_cost if config is not None else CRCostModel()
-    flat = config.cr_overhead if config is not None else 0
+    cfg = config if config is not None else SchedulerConfig()
+    tiered = cfg.cr_tiers is not None and cfg.cr_tiers.n_tiers > 1
+    if tiered:
+        assert cfg.cr_tiers.n_tiers == 2, \
+            "the JAX backend models two tiers (fast + durable spill); " \
+            "use the python backend for deeper hierarchies"
+    # durable-tier (spill) costs alias the fast tier when untiered, so the
+    # charging primitives need no config-dependent branching
+    spill = 1 if tiered else 0
     arr = lambda f, d=jnp.int32: jnp.asarray([f(x) for x in j], d)
     table = JobTable(
         user=arr(lambda x: uidx[x.user]),
@@ -104,8 +130,11 @@ def table_from_jobs(jobs, users, cpu_total: int,
         jclass=arr(lambda x: int(x.job_class)),
         submit=arr(lambda x: x.submit_time),
         state_mib=arr(lambda x: x.state_mib),
-        cost_save=arr(lambda x: flat + model.save_cost(x.state_mib)),
-        cost_restore=arr(lambda x: model.restore_cost(x.state_mib)),
+        cost_save=arr(lambda x: cfg.eviction_save_cost(x.state_mib)),
+        cost_restore=arr(lambda x: cfg.restart_restore_cost(x.state_mib)),
+        cost_save2=arr(lambda x: cfg.eviction_save_cost(x.state_mib, spill)),
+        cost_restore2=arr(
+            lambda x: cfg.restart_restore_cost(x.state_mib, spill)),
         state=jnp.full((n,), UNSUB, jnp.int32),
         progress=jnp.zeros((n,), jnp.int32),
         run_start=jnp.full((n,), -1, jnp.int32),
@@ -115,6 +144,8 @@ def table_from_jobs(jobs, users, cpu_total: int,
         n_ckpt=jnp.zeros((n,), jnp.int32),
         overhead=jnp.zeros((n,), jnp.int32),
         backfilled=arr(lambda x: int(x.backfilled)),
+        ckpt_tier=jnp.full((n,), -1, jnp.int32),
+        n_spill=jnp.zeros((n,), jnp.int32),
     )
     return table, entitlements(users, cpu_total)
 
@@ -156,10 +187,16 @@ def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
     """Start job ``idx`` (lines 37-38) iff ``admit``; O(1) scatter updates.
 
     A job with a checkpoint (``n_ckpt > 0``) restarts by restoring its
-    latest snapshot, so admission charges its precomputed restore cost —
-    the twin of ``omfs._start``."""
-    restore = jnp.where(admit & (tbl.n_ckpt[idx] > 0),
-                        tbl.cost_restore[idx], 0)
+    latest snapshot, so admission charges the restore cost of the tier the
+    snapshot was *placed* on at eviction (``ckpt_tier``; the cost columns
+    alias each other when untiered) — the twin of ``omfs._start``.  The
+    restore consumes the snapshot: ``ckpt_tier`` clears, freeing the
+    fast-tier capacity for the next victim."""
+    restore = jnp.where(
+        admit & (tbl.n_ckpt[idx] > 0),
+        jnp.where(tbl.ckpt_tier[idx] > 0,
+                  tbl.cost_restore2[idx], tbl.cost_restore[idx]),
+        0)
     return tbl._replace(
         state=tbl.state.at[idx].set(
             jnp.where(admit, RUNNING, tbl.state[idx])),
@@ -169,18 +206,34 @@ def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
             jnp.where(admit & (tbl.first_start[idx] < 0), t,
                       tbl.first_start[idx])),
         overhead=tbl.overhead.at[idx].add(restore),
+        ckpt_tier=tbl.ckpt_tier.at[idx].set(
+            jnp.where(admit, -1, tbl.ckpt_tier[idx])),
     )
 
 
+def victim_order(tbl: JobTable, cheap: bool = False) -> jax.Array:
+    """Victim permutation.  Standard: ``(priority, run_start, id)`` —
+    queues.running_victim_key.  ``cheap`` (the `omfs_cheap_victim` policy):
+    ``(save_cost, priority, run_start, id)`` — cheapest-to-checkpoint
+    first, priced at the fast tier (queues.cheap_victim_key)."""
+    n = tbl.cpus.shape[0]
+    if cheap:
+        return jnp.lexsort(
+            (jnp.arange(n), tbl.run_start, tbl.priority, tbl.cost_save))
+    return jnp.lexsort((jnp.arange(n), tbl.run_start, tbl.priority))
+
+
 def select_victims(tbl: JobTable, evictable: jax.Array, idle: jax.Array,
-                   cpus_needed: jax.Array) -> Tuple[jax.Array, jax.Array]:
+                   cpus_needed: jax.Array,
+                   order: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, jax.Array]:
     """The paper's while-loop (lines 32-36) as lexsort+cumsum: the minimal
-    prefix of evictable jobs — ordered (priority asc, run_start asc, id asc),
-    queues.running_victim_key — whose release makes ``cpus_needed`` fit.
+    prefix of evictable jobs — in ``order`` (default: the standard victim
+    key) — whose release makes ``cpus_needed`` fit.
 
     Returns (planned[J] victim mask, enough: idle + all evictable suffices)."""
-    n = tbl.cpus.shape[0]
-    order = jnp.lexsort((jnp.arange(n), tbl.run_start, tbl.priority))
+    if order is None:
+        order = victim_order(tbl)
     evict_sorted = evictable[order]
     cpus_sorted = jnp.where(evict_sorted, tbl.cpus[order], 0)
     freed_cum = jnp.cumsum(cpus_sorted)
@@ -192,23 +245,79 @@ def select_victims(tbl: JobTable, evictable: jax.Array, idle: jax.Array,
     return planned, enough
 
 
+def place_checkpoints(cfg: SchedulerConfig, tbl: JobTable, ckpt: jax.Array,
+                      order: Optional[jax.Array] = None,
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Tier placement for the ``ckpt`` victims: greedy cheapest-feasible in
+    victim ``order``, spilling to the durable tier when the fast tier is
+    full.  Returns ``(take_fast[J], save_cost[J])``.
+
+    Occupancy counts evicted-and-pending jobs holding a fast-tier snapshot
+    (a restore consumed the slot — `admit_job` cleared the tier), plus the
+    victims placed earlier in this very batch: the ``lax.scan`` walks the
+    batch in victim order so a victim that doesn't fit spills while a
+    later, smaller one may still claim the remaining space — exactly the
+    sequential greedy the Python reference performs per `_evict` call."""
+    tiers = cfg.cr_tiers
+    assert tiers is not None
+    cap0 = tiers.capacity_mib[0]
+    if order is None:
+        order = victim_order(tbl)
+    ckpt_sorted = ckpt[order]
+    # prefer the fast tier only where it is actually the cheaper save
+    # (ties break toward the faster tier, TieredCRCostModel.choose_tier)
+    want0 = ckpt_sorted & (tbl.cost_save <= tbl.cost_save2)[order]
+    if cap0 < 0:                       # unbounded fast tier: no spilling
+        take0_sorted = want0
+    else:
+        held0 = (tbl.state == PENDING) & (tbl.ckpt_tier == 0)
+        occ0 = jnp.sum(jnp.where(held0, tbl.state_mib, 0))
+        mib_sorted = jnp.where(want0, tbl.state_mib[order], 0)
+
+        def place(occ, x):
+            want, mib = x
+            take = want & (occ + mib <= cap0)
+            return occ + jnp.where(take, mib, 0), take
+
+        _, take0_sorted = jax.lax.scan(place, occ0, (want0, mib_sorted))
+    take_fast = jnp.zeros_like(ckpt).at[order].set(take0_sorted)
+    save = jnp.where(take_fast, tbl.cost_save, tbl.cost_save2)
+    return take_fast, save
+
+
 def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
-                    planned: jax.Array) -> JobTable:
-    """Lines 33-36 for every planned victim: checkpoint (or drop) and free."""
+                    planned: jax.Array,
+                    order: Optional[jax.Array] = None) -> JobTable:
+    """Lines 33-36 for every planned victim: checkpoint (or drop) and free.
+
+    With ``cfg.cr_tiers`` set, each checkpointed victim is *placed* on a
+    tier first (`place_checkpoints`, in victim ``order``) and charged that
+    tier's save cost; the placement is recorded in ``ckpt_tier`` so the
+    later restore (`admit_job`) reads from the same tier."""
     is_ckpt = tbl.jclass == CKPT
     kill = planned & ~is_ckpt
     ckpt = planned & is_ckpt
+    if cfg.cr_tiers is not None and cfg.cr_tiers.n_tiers > 1:
+        take_fast, save_cost = place_checkpoints(cfg, tbl, ckpt, order)
+        tier_of = jnp.where(take_fast, 0, 1)
+        spilled = ckpt & ~take_fast
+    else:
+        save_cost = tbl.cost_save
+        tier_of = jnp.zeros_like(tbl.ckpt_tier)
+        spilled = jnp.zeros_like(ckpt)
     return tbl._replace(
         state=jnp.where(
             ckpt, PENDING,
             jnp.where(kill, (KILLED if cfg.drop_killed else PENDING),
                       tbl.state)),
         progress=jnp.where(kill & (not cfg.drop_killed), 0, tbl.progress),
-        overhead=tbl.overhead + jnp.where(ckpt, tbl.cost_save, 0),
+        overhead=tbl.overhead + jnp.where(ckpt, save_cost, 0),
         run_start=jnp.where(planned, -1, tbl.run_start),
         finish=jnp.where(kill & cfg.drop_killed, t, tbl.finish),
         n_preempt=tbl.n_preempt + planned.astype(jnp.int32),
         n_ckpt=tbl.n_ckpt + ckpt.astype(jnp.int32),
+        ckpt_tier=jnp.where(ckpt, tier_of, tbl.ckpt_tier),
+        n_spill=tbl.n_spill + spilled.astype(jnp.int32),
     )
 
 
@@ -218,7 +327,8 @@ def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
 
 
 def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
-               tbl: JobTable, idx: jax.Array, eligible: jax.Array) -> JobTable:
+               tbl: JobTable, idx: jax.Array, eligible: jax.Array,
+               cheap_victims: bool = False) -> JobTable:
     """Process job ``idx`` (runner, lines 18-38); no-op unless eligible and
     still pending.  Kept as the un-optimized reference the incremental pass
     is benchmarked and property-tested against."""
@@ -252,7 +362,8 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
         over = usage_per_user[tbl.user] > ent[tbl.user]
         evictable = evictable & over
 
-    planned, enough = select_victims(tbl, evictable, idle, jc)
+    order = victim_order(tbl, cheap_victims)
+    planned, enough = select_victims(tbl, evictable, idle, jc, order)
 
     admit_evict = (~reject_23) & (~admit_26) & (~reject_28) & enough
     admit = eligible & (tbl.state[idx] == PENDING) & (~reject_23) & (
@@ -260,7 +371,7 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
     do_evict = admit & (~admit_26)
     planned = planned & do_evict
 
-    tbl = apply_evictions(cfg, t, tbl, planned)
+    tbl = apply_evictions(cfg, t, tbl, planned, order)
     return admit_job(tbl, idx, t, admit)
 
 
@@ -270,7 +381,8 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
 
 
 @lru_cache(maxsize=None)
-def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True):
+def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
+                   cheap_victims: bool = False):
     """Build the Algorithm-1 scheduling pass for `core.engine`.
     Memoized so repeated `engine.simulate` calls reuse the jitted scan.
 
@@ -279,6 +391,9 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True):
     idle-admit fast path and on every rejection — and defers the victim
     lexsort+cumsum to a ``lax.cond`` branch taken only when eviction is
     actually needed.  ``incremental=False`` is the original reference pass.
+
+    ``cheap_victims=True`` is the `omfs_cheap_victim` registry policy:
+    victims order by ``(save_cost, priority, run_start, id)``.
     """
 
     def pass_fn(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
@@ -290,7 +405,8 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True):
         if not incremental:
             def body_ref(i, tbl):
                 idx = order[i]
-                return _try_admit(cfg, ent, t, tbl, idx, eligible[idx])
+                return _try_admit(cfg, ent, t, tbl, idx, eligible[idx],
+                                  cheap_victims)
             return jax.lax.fori_loop(0, depth, body_ref, tbl)
 
         usage0, nonp0, busy0 = running_usage(tbl, ent.shape[0])
@@ -321,11 +437,13 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True):
                     evictable = evictable & (tbl.user != ju)
                 if cfg.victim_filter_over_entitlement:  # beyond-paper flag
                     evictable = evictable & (usage[tbl.user] > ent[tbl.user])
-                planned, enough = select_victims(tbl, evictable, idle, jc)
+                vorder = victim_order(tbl, cheap_victims)
+                planned, enough = select_victims(tbl, evictable, idle, jc,
+                                                 vorder)
                 admit = enough
                 planned = planned & admit
                 freed = jnp.where(planned, tbl.cpus, 0)
-                tbl = apply_evictions(cfg, t, tbl, planned)
+                tbl = apply_evictions(cfg, t, tbl, planned, vorder)
                 usage = usage - jax.ops.segment_sum(
                     freed, tbl.user, num_segments=ent.shape[0])
                 busy = busy - jnp.sum(freed)
@@ -372,11 +490,47 @@ def omfs_tick(cfg: SchedulerConfig, ent: jax.Array, tbl: JobTable, t: jax.Array,
 def simulate_jax(
     users, jobs, cfg: SchedulerConfig, horizon: int,
     pass_depth: Optional[int] = None, incremental: bool = True,
+    cheap_victims: bool = False,
 ) -> Tuple[JobTable, jax.Array]:
     """Run the full fleet simulation; returns (final table, busy[t] series)."""
     from repro.core import engine
     return engine.run_jax(users, jobs, cfg, horizon,
-                          make_omfs_pass(pass_depth, incremental))
+                          make_omfs_pass(pass_depth, incremental,
+                                         cheap_victims))
+
+
+def update_state_mib(tbl: JobTable, idx, state_mib,
+                     config: SchedulerConfig) -> JobTable:
+    """Grow/shrink job ``idx``'s checkpoint image at runtime — O(1) scatters.
+
+    Real training state changes size (optimizer warmup grows it, quantized
+    fast-tier saves shrink it); this hook rewrites ``state_mib`` and
+    re-evaluates the per-tier cost columns with the SAME integer arithmetic
+    `table_from_jobs` used at build time (`CRCostModel` evaluates on traced
+    int32 just as on Python ints).  Shapes and dtypes are unchanged, so a
+    jitted tick/scan compiled for the table keeps its cache — no re-trace.
+    The Python backend needs no twin: it prices ``Job.state_mib`` at charge
+    time, so assigning ``job.state_bytes`` is already enough.
+
+    ``idx`` and ``state_mib`` may be Python ints or traced int32 scalars;
+    ``config`` must be the same (static) config the pass runs under.
+    """
+    mib = jnp.clip(jnp.asarray(state_mib, jnp.int32), 0, MAX_STATE_MIB)
+    tiered = config.cr_tiers is not None and config.cr_tiers.n_tiers > 1
+    spill = 1 if tiered else 0
+    flat = config.cr_overhead
+    s0 = flat + config.tier_model(0).save_cost(mib)
+    r0 = config.tier_model(0).restore_cost(mib)
+    s1 = flat + config.tier_model(spill).save_cost(mib)
+    r1 = config.tier_model(spill).restore_cost(mib)
+    as32 = lambda v: jnp.asarray(v, jnp.int32)
+    return tbl._replace(
+        state_mib=tbl.state_mib.at[idx].set(mib),
+        cost_save=tbl.cost_save.at[idx].set(as32(s0)),
+        cost_restore=tbl.cost_restore.at[idx].set(as32(r0)),
+        cost_save2=tbl.cost_save2.at[idx].set(as32(s1)),
+        cost_restore2=tbl.cost_restore2.at[idx].set(as32(r1)),
+    )
 
 
 def signature_from_table(tbl: JobTable):

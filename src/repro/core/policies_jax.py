@@ -17,7 +17,12 @@ Size-aware C/R costs come for free: the shared `admit_job` /
 `apply_evictions` primitives charge the JobTable's precomputed
 ``cost_restore`` / ``cost_save`` columns (`core.crcost`), so backfill_cr's
 preemptions and every restart pay the same size-dependent overhead as the
-Python twins.
+Python twins.  The same holds for tiered eviction placement
+(``cfg.cr_tiers``): `apply_evictions` places each backfill_cr victim's
+snapshot (fast tier or durable spill, in the standard victim order — the
+same order `baselines.make_backfill` walks `sorted_victims`) and
+`admit_job` charges the placed tier's restore cost, with no
+baseline-specific code here.
 """
 from __future__ import annotations
 

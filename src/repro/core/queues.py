@@ -14,7 +14,7 @@ Conventions:
 """
 from __future__ import annotations
 
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.types import ClusterState, Job
 
@@ -42,8 +42,26 @@ def running_victim_key(job: Job) -> Tuple:
     return (job.priority, job.run_start, job.id)
 
 
-def sorted_victims(state: ClusterState) -> List[Job]:
+def cheap_victim_key(state: ClusterState) -> Callable[[Job], Tuple]:
+    """Size-aware victim order (beyond paper, `omfs_cheap_victim`):
+    cheapest-to-checkpoint first — ``(save_cost, priority, run_start, id)``.
+
+    The ordering cost is the *fast-tier* save cost (tier 0 of
+    ``cfg.cr_tiers``, or ``cfg.cr_cost``), the same number the JAX backend
+    precomputes as ``JobTable.cost_save``; the tier actually charged is
+    still chosen at eviction time (capacity may force a spill)."""
+    cfg = state.config
+
+    def key(job: Job) -> Tuple:
+        return (cfg.eviction_save_cost(job.state_mib),
+                job.priority, job.run_start, job.id)
+
+    return key
+
+
+def sorted_victims(state: ClusterState,
+                   key: Optional[Callable[[Job], Tuple]] = None) -> List[Job]:
     return sorted(
         (j for j in state.running_jobs() if evictable(state, j)),
-        key=running_victim_key,
+        key=key or running_victim_key,
     )

@@ -11,7 +11,7 @@ import itertools
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
-from repro.core.crcost import CRCostModel, state_mib_of
+from repro.core.crcost import CRCostModel, TieredCRCostModel, state_mib_of
 
 
 class JobClass(enum.IntEnum):
@@ -73,6 +73,8 @@ class Job:
     n_checkpoints: int = 0
     overhead: int = 0              # extra work units added by C/R cost
     backfilled: bool = False       # admitted by jumping the queue (backfill)
+    ckpt_tier: int = -1            # tier holding the latest snapshot (-1: none)
+    n_spills: int = 0              # checkpoints placed beyond the fast tier
 
     @property
     def remaining(self) -> int:
@@ -95,11 +97,32 @@ class SchedulerConfig:
     quantum: int = 30              # minimal uninterrupted run before evictable
     cr_overhead: int = 0           # legacy flat work units per checkpoint
     cr_cost: CRCostModel = CRCostModel()   # size-aware save/restore costs
+    # per-tier cost models + eviction placement; takes precedence over
+    # cr_cost when set (the flat cr_overhead still applies at every save)
+    cr_tiers: Optional[TieredCRCostModel] = None
     drop_killed: bool = True       # line 34: non-checkpointable victims are dropped
     # ---- beyond-paper extensions (all default OFF for fidelity) ----
     victim_filter_over_entitlement: bool = False   # only evict over-entitlement users
     avoid_self_eviction: bool = False              # never evict the requester's jobs
     elastic_shrink: bool = False                   # shrink instead of full eviction
+
+    # -- the one cost expression both backends share (DESIGN.md §Tier
+    # placement): the JAX backend precomputes these per JobTable column with
+    # Python-int arithmetic, the Python backend evaluates them at runtime —
+    # bit-equality across backends holds because it is the same function.
+    def tier_model(self, tier: int) -> CRCostModel:
+        if self.cr_tiers is not None:
+            return self.cr_tiers.tiers[tier]
+        return self.cr_cost
+
+    def eviction_save_cost(self, state_mib: int, tier: int = 0) -> int:
+        """Work units charged when a checkpointable victim lands on ``tier``
+        (legacy flat cr_overhead + the tier's size-dependent save cost)."""
+        return self.cr_overhead + self.tier_model(tier).save_cost(state_mib)
+
+    def restart_restore_cost(self, state_mib: int, tier: int = 0) -> int:
+        """Work units charged when a checkpointed job restarts from ``tier``."""
+        return self.tier_model(tier).restore_cost(state_mib)
 
 
 @dataclass

@@ -122,7 +122,8 @@ def oversub_scenario(cpu_total: int = 256):
 
 
 def thrashing_scenario(cpu_total: int = 64, quantum: int = 5,
-                       n_claims: int = 12, state_gib: int = 64):
+                       n_claims: int = 12, state_gib: int = 64,
+                       state_gibs: Optional[Sequence[int]] = None):
     """C/R cost materially changes the schedule (paper §III thrashing).
 
     User B fills the machine with long checkpointable jobs carrying *huge*
@@ -133,14 +134,22 @@ def thrashing_scenario(cpu_total: int = 64, quantum: int = 5,
     completions slide, later admissions see a different machine, and
     goodput drops — the schedules (not just the metrics) diverge.
 
+    ``state_gibs`` (one GiB size per flood job, default four equal
+    ``state_gib`` jobs) makes the flood heterogeneous — the regime where
+    tiered eviction placement (snapshots compete for fast-tier capacity)
+    and size-aware victim selection (`omfs_cheap_victim` prefers the
+    cheap-to-checkpoint victims) change the schedule.
+
     Deterministic by construction (no RNG).  Returns ``(users, jobs)``;
     B's flood jobs are the ones with ``state_bytes > 0``."""
     users = [User("A", 50.0), User("B", 50.0)]
+    if state_gibs is None:
+        state_gibs = (state_gib,) * 4
     jobs = [
         Job(user="B", cpus=cpu_total // 4, work=300,
             job_class=JobClass.CHECKPOINTABLE, submit_time=0,
-            state_bytes=state_gib << 30)
-        for _ in range(4)
+            state_bytes=gib << 30)
+        for gib in state_gibs
     ]
     period = max(2 * quantum, 4)
     for i in range(n_claims):

@@ -7,7 +7,7 @@ on either engine backend.
 import argparse
 
 from repro.core import engine
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
 from repro.core.metrics import compute_metrics
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -28,6 +28,14 @@ def main(argv=None):
                     help="size-aware C/R: tier write bandwidth (0 = free)")
     ap.add_argument("--restore-mib-per-tick", type=int, default=0,
                     help="size-aware C/R: tier read bandwidth (0 = free)")
+    ap.add_argument("--fast-tier-cap-mib", type=int, default=None,
+                    help="enable tiered eviction placement: fast-tier "
+                         "capacity in MiB (-1 = unbounded); the "
+                         "--*-mib-per-tick bandwidths price the fast tier")
+    ap.add_argument("--spill-save-mib-per-tick", type=int, default=2048,
+                    help="durable spill tier write bandwidth")
+    ap.add_argument("--spill-restore-mib-per-tick", type=int, default=4096,
+                    help="durable spill tier read bandwidth")
     ap.add_argument("--pass-depth", type=int, default=64,
                     help="per-tick queue sweep bound on the jax backend")
     ap.add_argument("--arrival-rate", type=float, default=0.08)
@@ -40,11 +48,18 @@ def main(argv=None):
                         arrival_rate=args.arrival_rate)
     users = make_users(spec)
     jobs = make_jobs(spec, users)
+    fast = CRCostModel(save_mib_per_tick=args.save_mib_per_tick,
+                       restore_mib_per_tick=args.restore_mib_per_tick)
+    tiers = None
+    if args.fast_tier_cap_mib is not None:
+        tiers = TieredCRCostModel(
+            tiers=(fast, CRCostModel(
+                save_mib_per_tick=args.spill_save_mib_per_tick,
+                restore_mib_per_tick=args.spill_restore_mib_per_tick)),
+            capacity_mib=(args.fast_tier_cap_mib, UNBOUNDED))
     cfg = SchedulerConfig(
         cpu_total=args.chips, quantum=args.quantum,
-        cr_overhead=args.cr_overhead,
-        cr_cost=CRCostModel(save_mib_per_tick=args.save_mib_per_tick,
-                            restore_mib_per_tick=args.restore_mib_per_tick))
+        cr_overhead=args.cr_overhead, cr_cost=fast, cr_tiers=tiers)
     print(f"{len(jobs)} jobs, {args.tenants} tenants, {args.chips} chips, "
           f"policy={args.policy}, backend={backend}")
 

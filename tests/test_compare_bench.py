@@ -1,0 +1,82 @@
+"""The bench-regression gate (`benchmarks.compare_bench`): a >tolerance
+drop fails, within-tolerance noise passes, throughput rows compare
+anchor-normalized (machine-independent), missing rows fail."""
+from benchmarks.compare_bench import ANCHOR, compare, make_baseline, render
+
+
+def _baseline():
+    fresh = {
+        ANCHOR: 1000.0,
+        "sched_scale/jax_inc_64jobs_ticks_per_s": 4000.0,
+        "thrashing/disk_goodput": 0.64,
+        "tier_placement/capacity_all_goodput": 0.68,
+        "thrashing/goodput_drop_disk_vs_free": 0.05,   # excluded: a delta
+    }
+    return make_baseline(fresh), fresh
+
+
+def test_make_baseline_selects_gated_rows():
+    baseline, fresh = _baseline()
+    names = {e["name"] for e in baseline}
+    assert ANCHOR in names
+    assert "thrashing/goodput_drop_disk_vs_free" not in names
+    by_name = {e["name"]: e for e in baseline}
+    assert by_name["sched_scale/jax_inc_64jobs_ticks_per_s"][
+        "normalize_by"] == ANCHOR
+    assert by_name["thrashing/disk_goodput"]["normalize_by"] is None
+    assert by_name[ANCHOR]["rtol"] is None        # the anchor is not gated
+
+
+def test_within_tolerance_passes():
+    baseline, fresh = _baseline()
+    fresh = dict(fresh)
+    fresh["thrashing/disk_goodput"] *= 0.85       # -15% < 20% tolerance
+    _, failures = compare(baseline, fresh)
+    assert failures == []
+
+
+def test_synthetic_regression_fails():
+    baseline, fresh = _baseline()
+    fresh = dict(fresh)
+    fresh["tier_placement/capacity_all_goodput"] *= 0.7    # -30%
+    table, failures = compare(baseline, fresh)
+    assert len(failures) == 1
+    assert "tier_placement/capacity_all_goodput" in failures[0]
+    assert "-30.0%" in failures[0]
+    assert "REGRESSED" in render(table, failures)
+
+
+def test_throughput_normalized_by_anchor():
+    """A uniformly slower machine (anchor and jax rows both halved) is NOT
+    a regression; the jax row dropping much faster than the anchor is."""
+    baseline, fresh = _baseline()
+    slower = {k: (v * 0.5 if "ticks_per_s" in k else v)
+              for k, v in fresh.items()}
+    _, failures = compare(baseline, slower)
+    assert failures == []
+    skewed = dict(fresh)
+    skewed["sched_scale/jax_inc_64jobs_ticks_per_s"] *= 0.5   # anchor intact
+    _, failures = compare(baseline, skewed)
+    assert len(failures) == 1 and "jax_inc" in failures[0]
+
+
+def test_missing_row_fails():
+    baseline, fresh = _baseline()
+    fresh = dict(fresh)
+    del fresh["thrashing/disk_goodput"]
+    table, failures = compare(baseline, fresh)
+    assert any("missing" in f for f in failures)
+    assert "MISSING" in render(table, failures)
+
+
+def test_missing_anchor_fails_rather_than_disabling_the_gate():
+    """Losing the anchor row (a renamed smoke case) must FAIL, not
+    silently skip every anchor-normalized throughput comparison."""
+    baseline, fresh = _baseline()
+    fresh = dict(fresh)
+    del fresh[ANCHOR]
+    fresh["sched_scale/jax_inc_64jobs_ticks_per_s"] *= 0.01  # would regress
+    table, failures = compare(baseline, fresh)
+    assert any(ANCHOR in f and "missing" in f for f in failures)
+    assert any("anchor row unavailable" in f for f in failures)
+    assert "NO-ANCHOR" in render(table, failures)

@@ -145,6 +145,35 @@ def test_from_measured_min_representable_bandwidth():
     assert m.save_cost(100) == 25600
 
 
+@settings(max_examples=20, deadline=None)
+@given(mib_per_s=st.floats(1.0, 4000.0), tick_s=st.sampled_from([0.05, 0.1, 0.5, 1.0]),
+       image_mib=st.integers(1, 1 << 18))
+def test_from_stats_durable_tier_round_trip(mib_per_s, tick_s, image_mib):
+    """Measured durable-tier TierStats -> model -> predicted ticks stays on
+    the /256 rational grid: never cheaper than the true transfer time, and
+    never more than one grid step (1/256 of bandwidth) + 1 ceil tick over.
+    This is the disk-tier calibration the tiered placement model feeds on."""
+    from repro.checkpoint.tiers import TierStats
+
+    stats = TierStats(saves=3, restores=2,
+                      bytes_written=int(mib_per_s * 4) * MIB,
+                      bytes_read=int(mib_per_s * 4) * MIB,
+                      save_seconds=4.0, restore_seconds=4.0)
+    if stats.bytes_written == 0:
+        return
+    m = CRCostModel.from_stats(stats, tick_seconds=tick_s)
+    true_mib_per_tick = stats.bytes_written / 4.0 * tick_s / MIB
+    predicted = m.save_cost(image_mib)
+    ideal = image_mib / true_mib_per_tick
+    # floor-quantized bandwidth can only charge MORE than ideal...
+    assert predicted >= ideal - 1
+    # ...and at most one /256 grid step of bandwidth + the ceil tick
+    q = m.save_mib_per_tick / m.save_tick_den
+    assert q <= true_mib_per_tick + 1 / 256
+    worst = image_mib / max(q, 1 / 256)
+    assert predicted <= worst + 1
+
+
 def test_ticks_from_seconds():
     assert CRCostModel.ticks_from_seconds(0.0, 0.1) == 0
     assert CRCostModel.ticks_from_seconds(0.05, 0.1) == 1

@@ -7,7 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import engine, omfs_jax
-from repro.core.crcost import CRCostModel
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
 from repro.core.simulator import simulate
 from repro.core.types import SchedulerConfig
 from repro.core.workload import WorkloadSpec, make_jobs, make_users
@@ -66,6 +66,40 @@ def test_policy_equivalence_heterogeneous_cr_costs(
     jx = engine.simulate(users, jobs, cfg, 100, policy=policy, backend="jax")
     assert py.signature() == jx.signature()
     assert (py.busy_series() == jx.busy_series()).all()
+
+
+@pytest.mark.parametrize("policy", ["omfs", "omfs_cheap_victim",
+                                    "backfill_cr"])
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.integers(0, 12),
+       # sampled (not free-range) so repeated examples share compiled scans
+       cap_mib=st.sampled_from([0, 2_000, 50_000, 500_000, UNBOUNDED]),
+       fast_bw=st.sampled_from([4096, 16384]),
+       slow_bw=st.sampled_from([512, 2048]))
+def test_policy_equivalence_tiered_placement(
+        policy, seed, quantum, cap_mib, fast_bw, slow_bw):
+    """Tiered eviction placement fuzz: heterogeneous lognormal state sizes
+    competing for a capacity-bounded fast tier, durable spill — the JAX
+    placement scan must produce bit-identical schedules (and spill counts)
+    to the Python reference's sequential greedy, for the eviction-heavy
+    policies."""
+    users, jobs = _workload(seed, n_users=3)
+    if not jobs:
+        return
+    tiers = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=fast_bw,
+                           restore_mib_per_tick=2 * fast_bw),
+               CRCostModel(save_mib_per_tick=slow_bw,
+                           restore_mib_per_tick=2 * slow_bw, save_base=1)),
+        capacity_mib=(cap_mib, UNBOUNDED))
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=1,
+                          cr_tiers=tiers)
+    py = engine.simulate(users, jobs, cfg, 100,
+                         policy=policy, backend="python")
+    jx = engine.simulate(users, jobs, cfg, 100, policy=policy, backend="jax")
+    assert py.signature() == jx.signature()
+    assert (py.busy_series() == jx.busy_series()).all()
+    assert py.summary()["spills"] == jx.summary()["spills"]
 
 
 @pytest.mark.parametrize("policy", POLICY_NAMES)
@@ -148,6 +182,27 @@ def test_simulator_adapter_matches_engine():
                           policy="omfs", backend="python")
     assert res.schedule_signature() == eng.sim.schedule_signature()
     assert [t.busy for t in res.log] == [t.busy for t in eng.sim.log]
+
+
+def test_simulate_matrix_matches_per_policy_simulate():
+    """The shared lax.switch scan (one compile for every policy) must be
+    bit-identical to compiling one scan per policy."""
+    users, jobs = _workload(seed=9, n_users=3)
+    cfg = SchedulerConfig(cpu_total=32, quantum=6, cr_overhead=1)
+    matrix = engine.simulate_matrix(users, jobs, cfg, 100, POLICY_NAMES)
+    assert [r.policy for r in matrix] == POLICY_NAMES
+    for res in matrix:
+        solo = engine.simulate(users, jobs, cfg, 100,
+                               policy=res.policy, backend="jax")
+        assert res.signature() == solo.signature(), res.policy
+        assert (res.busy_series() == solo.busy_series()).all()
+
+
+def test_simulate_matrix_rejects_unknown():
+    users, jobs = _workload(seed=3, n_users=2)
+    with pytest.raises(ValueError, match="unknown policies"):
+        engine.simulate_matrix(users, jobs, SchedulerConfig(cpu_total=32),
+                               10, ["omfs", "nope"])
 
 
 def test_engine_rejects_unknown():

@@ -1,0 +1,331 @@
+"""Tiered eviction placement (`core.crcost.TieredCRCostModel`): greedy
+cheapest-feasible tier choice with durable spill, size-aware victim
+selection (`omfs_cheap_victim`), the `update_state_mib` no-retrace hook,
+and the checkpoint-service calibration bridge."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, omfs_jax
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
+from repro.core.types import Job, JobClass, SchedulerConfig, User
+from repro.core.workload import thrashing_scenario
+
+FAST = CRCostModel(save_mib_per_tick=16384, restore_mib_per_tick=32768)
+DISK = CRCostModel(save_mib_per_tick=2048, restore_mib_per_tick=4096)
+
+
+def _tiered(cap_mib: int) -> SchedulerConfig:
+    return SchedulerConfig(
+        cpu_total=64, quantum=5,
+        cr_tiers=TieredCRCostModel(tiers=(FAST, DISK),
+                                   capacity_mib=(cap_mib, UNBOUNDED)))
+
+
+def _run(cfg, policy="omfs", backend="python", horizon=400, gibs=None):
+    users, jobs = thrashing_scenario(64, quantum=5, state_gibs=gibs)
+    return engine.simulate(users, jobs, cfg, horizon,
+                           policy=policy, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# model semantics
+# ---------------------------------------------------------------------------
+
+
+def test_choose_tier_greedy_cheapest_feasible():
+    m = TieredCRCostModel(tiers=(FAST, DISK), capacity_mib=(100, UNBOUNDED))
+    # fits and fast is cheaper -> tier 0
+    assert m.choose_tier(100, [0, 0]) == 0
+    # fast tier full -> spill
+    assert m.choose_tier(100, [1, 0]) == 1
+    assert m.choose_tier(101, [0, 0]) == 1
+    # an expensive "fast" tier loses to a cheaper durable one even with room
+    costly = TieredCRCostModel(tiers=(DISK, FAST),
+                               capacity_mib=(1 << 20, UNBOUNDED))
+    assert costly.choose_tier(100 << 10, [0, 0]) == 1
+    # equal cost ties break toward the faster (lower) tier
+    tie = TieredCRCostModel(tiers=(FAST, FAST), capacity_mib=(10_000, UNBOUNDED))
+    assert tie.choose_tier(100, [0, 0]) == 0
+
+
+def test_tiered_model_invariants():
+    with pytest.raises(AssertionError):
+        TieredCRCostModel(tiers=(FAST, DISK), capacity_mib=(100, 100))
+    with pytest.raises(AssertionError):
+        TieredCRCostModel(tiers=(FAST,), capacity_mib=(100, UNBOUNDED))
+    m = TieredCRCostModel(tiers=(FAST, DISK), capacity_mib=(100, UNBOUNDED))
+    hash(m)                               # frozen: a valid static jit arg
+    hash(SchedulerConfig(cr_tiers=m))
+
+
+def test_tiered_from_stats_mem_disk_pair():
+    class Mem:
+        bytes_written = 4000 << 20
+        bytes_read = 4000 << 20
+        save_seconds = 1.0
+        restore_seconds = 0.5
+
+    class Disk:
+        bytes_written = 500 << 20
+        bytes_read = 500 << 20
+        save_seconds = 1.0
+        restore_seconds = 1.0
+
+    m = TieredCRCostModel.from_stats([Mem(), Disk()], tick_seconds=0.1,
+                                     capacity_mib=[8192, UNBOUNDED])
+    assert m.n_tiers == 2
+    assert m.capacity_mib == (8192, UNBOUNDED)
+    # mem: 4000 MiB/s * 0.1 s/tick = 400 MiB/tick; disk: 50 MiB/tick
+    assert m.tiers[0].save_cost(4000) == 10
+    assert m.tiers[1].save_cost(4000) == 80
+    # a tier with no measured traffic inherits the fastest measured model
+    class Idle:
+        bytes_written = 0
+        save_seconds = 0.0
+
+    m2 = TieredCRCostModel.from_stats([Mem(), Idle()], tick_seconds=0.1,
+                                      capacity_mib=[8192, UNBOUNDED])
+    assert m2.tiers[1] == m2.tiers[0]
+    with pytest.raises(ValueError, match="no tier has measured save"):
+        TieredCRCostModel.from_stats([Idle(), Idle()], tick_seconds=0.1,
+                                     capacity_mib=[8192, UNBOUNDED])
+
+
+# ---------------------------------------------------------------------------
+# scheduling semantics, both backends
+# ---------------------------------------------------------------------------
+
+
+def test_zero_capacity_degenerates_to_single_durable_tier():
+    """cap=0: every placement spills, so the schedule AND the charged
+    overheads must be bit-identical to a single-tier model priced at the
+    durable tier."""
+    single = _run(SchedulerConfig(cpu_total=64, quantum=5, cr_cost=DISK))
+    tiered = _run(_tiered(0))
+    assert single.signature() == tiered.signature()
+    assert [j.overhead for j in single.sim.job_table()] == \
+        [j.overhead for j in tiered.sim.job_table()]
+    spilled = [j for j in tiered.sim.job_table() if j.n_spills > 0]
+    assert spilled, "every checkpoint should have spilled"
+
+
+def test_unbounded_capacity_degenerates_to_single_fast_tier():
+    single = _run(SchedulerConfig(cpu_total=64, quantum=5, cr_cost=FAST))
+    tiered = _run(_tiered(UNBOUNDED))
+    assert single.signature() == tiered.signature()
+    assert all(j.n_spills == 0 for j in tiered.sim.job_table())
+
+
+def test_placement_skip_fit_greedy():
+    """A victim too big for the remaining fast capacity spills, but a
+    LATER smaller victim may still claim the space — the sequential greedy,
+    on both backends."""
+    users = [User("A", 50.0), User("B", 50.0)]
+    # three victims evicted in ONE pass (same priority, same run_start ->
+    # id order): 8 GiB, 6 GiB, 2 GiB against a 10 GiB fast tier.  A
+    # high-priority 32-CPU filler (admitted first, last in victim order)
+    # keeps idle at 8, so the 32-CPU claim needs all three flood victims.
+    flood = [Job(user="B", cpus=8, work=400, priority=0,
+                 job_class=JobClass.CHECKPOINTABLE, submit_time=0,
+                 state_bytes=gib << 30) for gib in (8, 6, 2)]
+    filler = Job(user="B", cpus=32, work=400, priority=5,
+                 job_class=JobClass.CHECKPOINTABLE, submit_time=0)
+    claim = Job(user="A", cpus=32, work=8,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=10)
+    cfg = SchedulerConfig(
+        cpu_total=64, quantum=5,
+        cr_tiers=TieredCRCostModel(tiers=(FAST, DISK),
+                                   capacity_mib=(10 << 10, UNBOUNDED)))
+    jobs = flood + [filler, claim]
+    res = engine.simulate(users, [j.clone() for j in jobs], cfg, 12,
+                          policy="omfs", backend="python")
+    tiers = {j.id: j.ckpt_tier for j in res.sim.job_table()
+             if j.n_checkpoints > 0}
+    # 8 GiB fits (8<=10), 6 GiB spills (8+6>10), 2 GiB fits (8+2<=10)
+    assert tiers[flood[0].id] == 0
+    assert tiers[flood[1].id] == 1
+    assert tiers[flood[2].id] == 0
+    jx = engine.simulate(users, jobs, cfg, 12, policy="omfs", backend="jax")
+    t = jax.device_get(jx.table)
+    assert res.signature() == jx.signature()
+    np.testing.assert_array_equal(
+        t.ckpt_tier[:3], [tiers[f.id] for f in flood])
+    np.testing.assert_array_equal(t.n_spill[:5], [0, 1, 0, 0, 0])
+
+
+def test_capacity_frees_when_snapshot_restored():
+    """A restore consumes the snapshot: after the ping-pong returns a
+    victim to the machine, the next eviction can use the freed fast tier."""
+    # fast tier fits exactly one 64 GiB snapshot; the thrashing scenario
+    # evicts one victim at a time, so nothing should ever spill
+    res = _run(_tiered(64 << 10))
+    jobs = res.sim.job_table()
+    assert sum(j.n_checkpoints for j in jobs) > 1
+    assert sum(j.n_spills for j in jobs) == 0
+
+
+def test_tiered_placement_recovers_goodput():
+    """The bench headline as a test: fast-tier capacity only improves
+    goodput over the all-spill (single slow tier) placement."""
+    gibs = (128, 64, 32, 16)
+    slow = _run(_tiered(0), gibs=gibs).summary()
+    some = _run(_tiered(sum(g << 10 for g in gibs) // 2), gibs=gibs).summary()
+    full = _run(_tiered(UNBOUNDED), gibs=gibs).summary()
+    assert some["goodput"] >= slow["goodput"]
+    assert full["goodput"] >= slow["goodput"]
+    assert full["spills"] == 0 and slow["spills"] == slow["checkpoints"] > 0
+
+
+# ---------------------------------------------------------------------------
+# size-aware victim selection (omfs_cheap_victim)
+# ---------------------------------------------------------------------------
+
+
+def test_cheap_victim_prefers_cheapest_checkpoint():
+    """Two equal-priority victims, one with a huge image: the faithful
+    order evicts by (priority, run_start, id) — the big job first — while
+    omfs_cheap_victim picks the small-image victim."""
+    users = [User("A", 50.0), User("B", 50.0)]
+    big = Job(user="B", cpus=16, work=400, job_class=JobClass.CHECKPOINTABLE,
+              submit_time=0, state_bytes=64 << 30)
+    small = Job(user="B", cpus=16, work=400,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=0,
+                state_bytes=1 << 30)
+    huge = Job(user="B", cpus=16, work=400,
+               job_class=JobClass.CHECKPOINTABLE, submit_time=0,
+               state_bytes=128 << 30)
+    claim = Job(user="A", cpus=32, work=5,
+                job_class=JobClass.CHECKPOINTABLE, submit_time=10)
+    cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_cost=DISK)
+
+    def victims(policy):
+        res = engine.simulate(users, [big.clone(), small.clone(),
+                                      huge.clone(), claim.clone()], cfg, 12,
+                              policy=policy, backend="python")
+        return {j.id: j.n_checkpoints for j in res.sim.job_table()}
+
+    faithful = victims("omfs")
+    cheap = victims("omfs_cheap_victim")
+    # the claim needs 32 CPUs: 16 idle + exactly one 16-CPU victim.
+    # faithful order is (priority, run_start, id) -> big (lowest id);
+    # cheap order is (save_cost, ...) -> small (1 GiB image)
+    assert faithful[big.id] == 1 and faithful[small.id] == 0
+    assert cheap[big.id] == 0 and cheap[small.id] == 1
+    assert faithful[huge.id] == 0 and cheap[huge.id] == 0
+
+
+def test_cheap_victim_changes_schedule_on_heterogeneous_flood():
+    gibs = (128, 64, 32, 16)
+    cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_cost=DISK)
+    a = _run(cfg, policy="omfs", gibs=gibs)
+    b = _run(cfg, policy="omfs_cheap_victim", gibs=gibs)
+    assert a.signature() != b.signature()
+    assert b.summary()["goodput"] >= a.summary()["goodput"]
+
+
+# ---------------------------------------------------------------------------
+# the state_mib runtime-update hook
+# ---------------------------------------------------------------------------
+
+
+def _tick_setup(cfg):
+    users, jobs = thrashing_scenario(64, quantum=5)
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)
+
+    @jax.jit
+    def tick(tbl, ent, t):
+        return engine.tick_jax(cfg, ent, tbl, t,
+                               omfs_jax.make_omfs_pass())
+
+    return tbl, ent, tick
+
+
+def test_update_state_mib_recomputes_cost_columns():
+    cfg = _tiered(64 << 10)
+    users, jobs = thrashing_scenario(64, quantum=5)
+    tbl, _ = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)
+    new = omfs_jax.update_state_mib(tbl, 0, 128 << 10, cfg)
+    assert int(new.state_mib[0]) == 128 << 10
+    assert int(new.cost_save[0]) == cfg.eviction_save_cost(128 << 10, 0)
+    assert int(new.cost_save2[0]) == cfg.eviction_save_cost(128 << 10, 1)
+    assert int(new.cost_restore2[0]) == cfg.restart_restore_cost(128 << 10, 1)
+    # other rows untouched
+    np.testing.assert_array_equal(np.asarray(new.cost_save[1:]),
+                                  np.asarray(tbl.cost_save[1:]))
+
+
+def test_update_state_mib_does_not_retrace():
+    """The hook's contract: growing/shrinking a job's state between ticks
+    must not invalidate the compiled tick (same shapes/dtypes)."""
+    cfg = _tiered(64 << 10)
+    tbl, ent, tick = _tick_setup(cfg)
+    tbl = tick(tbl, ent, 0)
+    n0 = tick._cache_size()
+    assert n0 == 1
+    tbl = omfs_jax.update_state_mib(tbl, 1, 4 << 10, cfg)
+    tbl = tick(tbl, ent, 1)
+    assert tick._cache_size() == n0, "update_state_mib caused a re-trace"
+
+
+def test_update_state_mib_changes_schedule():
+    """Shrinking a flood job's image mid-run (the quantized fast-tier save
+    path) makes its C/R bounces cheaper, pulling its completion INTO the
+    horizon — the schedule responds to the runtime size change without a
+    rebuild (and growing it charges visibly more overhead)."""
+    cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_cost=DISK)
+    tbl0, ent, tick = _tick_setup(cfg)
+
+    def run(resize_to=None, at=2):
+        tbl = tbl0
+        for t in range(400):
+            if resize_to is not None and t == at:
+                tbl = omfs_jax.update_state_mib(tbl, 0, resize_to, cfg)
+            tbl = tick(tbl, ent, t)
+        return tbl
+
+    base = run()
+    shrunk = run(resize_to=1)            # 64 GiB -> 1 MiB before any evict
+    grown = run(resize_to=512 << 10)
+    assert omfs_jax.signature_from_table(base) != \
+        omfs_jax.signature_from_table(shrunk)
+    assert int(shrunk.overhead[0]) < int(base.overhead[0])
+    assert int(grown.overhead[0]) > int(base.overhead[0])
+    # cheaper bounces let the shrunk job finish within the horizon
+    assert int(shrunk.finish[0]) >= 0
+    assert int(base.finish[0]) < 0
+
+
+# ---------------------------------------------------------------------------
+# calibration bridge (checkpoint service -> scheduler)
+# ---------------------------------------------------------------------------
+
+
+def test_service_calibrate_tiered(tmp_path):
+    from repro.checkpoint.manager import ManagerConfig
+    from repro.checkpoint.service import CheckpointService
+
+    svc = CheckpointService(ManagerConfig(root=tmp_path,
+                                          mem_capacity_bytes=2 << 30,
+                                          use_delta=False,
+                                          async_durable=False))
+    try:
+        # deterministic measured traffic instead of real (flaky) timings
+        mem, disk = svc.manager.mem.stats, svc.manager.disk.stats
+        mem.bytes_written, mem.save_seconds = 8000 << 20, 1.0
+        mem.bytes_read, mem.restore_seconds = 8000 << 20, 0.5
+        disk.bytes_written, disk.save_seconds = 400 << 20, 1.0
+        disk.bytes_read, disk.restore_seconds = 400 << 20, 1.0
+        m = svc.calibrate_tiered(tick_seconds=0.1)
+    finally:
+        svc.close()
+    assert isinstance(m, TieredCRCostModel)
+    assert m.capacity_mib == (2 << 10, UNBOUNDED)
+    # mem 800 MiB/tick vs disk 40 MiB/tick
+    assert m.tiers[0].save_cost(8000) == 10
+    assert m.tiers[1].save_cost(8000) == 200
+    # the pair is a valid scheduler config end-to-end
+    cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_tiers=m)
+    res = _run(cfg, horizon=100)
+    jx = _run(cfg, backend="jax", horizon=100)
+    assert res.signature() == jx.signature()
