@@ -107,7 +107,7 @@ def main() -> None:
     # int8 quantized fast-tier (optimizer moments; error-tolerant)
     t0 = time.perf_counter()
     q_bytes = 0
-    for k, a in cur.items():
+    for _k, a in cur.items():
         if a.dtype == np.float32 and a.size >= 128:
             q, s = quantize_array(jnp.asarray(a))
             q_bytes += q.size + s.size * 4

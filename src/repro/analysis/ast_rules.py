@@ -1,0 +1,495 @@
+"""AST lint rules specific to this repo's JAX scheduler contracts.
+
+Three invariants the test suite cannot see but the AST can:
+
+* **tracer-leak** — Python control flow (``if``/``while``/``and``/``not``)
+  or host conversions (``int()``/``bool()``/``float()``/``.item()``) applied
+  to values derived from `JobTable` columns or ``jnp``/``lax`` ops inside a
+  traced context.  Under ``jit`` these either raise ``TracerBoolConversion``
+  at runtime on a rarely-taken path or silently bake a traced value into a
+  Python constant at trace time.
+* **host-sync** — ``np.asarray``/``np.array``/``jax.device_get``/
+  ``.block_until_ready()`` inside a jitted pass or a ``lax`` loop body:
+  a hidden device->host transfer that serializes the hot loop.
+* **cost-grid** — a float literal, true division ``/``, or float cast
+  flowing into the integer /256 cost grid (the ``cost_*``/``state_mib``/
+  ``overhead`` columns and the `CRCostModel` evaluation functions).  The
+  grid is what keeps the Python and JAX backends bit-identical; one stray
+  float breaks cross-backend equality without failing any unit test.
+
+Plus **mutable-default** (the classic shared-default-argument bug), so the
+analyzer holds the line even where ruff is not installed.
+
+Traced contexts are discovered syntactically:
+
+* functions decorated ``@jax.jit`` / ``@partial(jax.jit, ...)`` (params
+  tainted except literal ``static_argnames``) — *strict* contexts;
+* callbacks passed to ``jax.lax.{fori_loop,while_loop,scan,cond,switch,
+  map,associative_scan}`` (all params tainted) — *strict* contexts;
+* functions taking a `JobTable` parameter (``tbl``/``table`` or an
+  annotation naming ``JobTable``) — *soft* contexts: the table is tainted
+  but host syncs are allowed, and ``jax.device_get``/``np.asarray`` launder
+  taint (these helpers legitimately run host-side, e.g. signatures).
+
+``.shape``/``.dtype``/``.ndim``/``.size`` of a traced value are static at
+trace time and do not propagate taint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import SourceFile, Violation, dotted, register, tail
+
+LAX_LOOPS = {"fori_loop", "while_loop", "scan", "cond", "switch", "map",
+             "associative_scan"}
+SHAPE_ATTRS = {"shape", "dtype", "ndim", "size"}
+TABLE_PARAMS = {"tbl", "table"}
+TABLE_ANNOS = {"JobTable"}
+TAINT_ROOTS = ("jnp.", "lax.", "jax.lax.", "jax.ops.", "jax.nn.")
+LAUNDER_CALLS = {"jax.device_get", "np.asarray", "np.array", "device_get"}
+SYNC_CALLS = {"np.asarray", "np.array", "jax.device_get", "device_get"}
+HOST_CONVERSIONS = {"int", "bool", "float"}
+# the /256 integer cost grid: JobTable columns priced by core.crcost
+GRID_NAMES = {"cost_save", "cost_restore", "cost_save2", "cost_restore2",
+              "state_mib", "overhead"}
+# CRCostModel evaluation path: must stay integer end-to-end (calibration
+# boundaries like from_measured/ticks_from_seconds take floats on purpose)
+GRID_FUNCTIONS = {"_cost", "save_cost", "restore_cost", "compressed_mib",
+                  "_ceil_div", "_saturate", "state_mib_of", "choose_tier",
+                  "feasible", "eviction_save_cost", "restart_restore_cost"}
+
+
+# ---------------------------------------------------------------------------
+# Traced-context discovery
+# ---------------------------------------------------------------------------
+
+
+def _is_jit_decorator(dec: ast.expr) -> Optional[ast.Call]:
+    """Return a Call carrying jit kwargs when ``dec`` is a jit decorator."""
+    if tail(dec) == "jit":
+        return ast.Call(func=dec, args=[], keywords=[])
+    if isinstance(dec, ast.Call) and tail(dec.func) == "jit":
+        return dec
+    if isinstance(dec, ast.Call) and tail(dec.func) == "partial":
+        if any(tail(a) == "jit" for a in dec.args):
+            return dec
+    return None
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, str):
+                return {kw.value.value}
+    return set()
+
+
+def _table_params(fn) -> Set[str]:
+    names = set()
+    for a in fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs:
+        anno = getattr(a, "annotation", None)
+        anno_s = ""
+        if anno is not None:
+            anno_s = dotted(anno) or (
+                anno.value if isinstance(anno, ast.Constant) else "")
+        if a.arg in TABLE_PARAMS or any(t in str(anno_s) for t in TABLE_ANNOS):
+            names.add(a.arg)
+    return names
+
+
+def _all_params(fn) -> Set[str]:
+    args = fn.args
+    out = {a.arg for a in args.args + args.kwonlyargs + args.posonlyargs}
+    if args.vararg:
+        out.add(args.vararg.arg)
+    if args.kwarg:
+        out.add(args.kwarg.arg)
+    return out
+
+
+def _lax_callback_ids(tree: ast.AST) -> Set[int]:
+    """ids of FunctionDef/Lambda nodes passed to lax control-flow calls."""
+    by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and tail(node.func) in LAX_LOOPS:
+            d = dotted(node.func) or ""
+            if not (d.startswith(("jax.", "lax.")) or d in LAX_LOOPS):
+                continue
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    out.add(id(arg))
+                elif isinstance(arg, ast.Name) and arg.id in by_name:
+                    for fn in by_name[arg.id]:
+                        out.add(id(fn))
+                elif isinstance(arg, (ast.List, ast.Tuple)):   # switch branches
+                    for e in arg.elts:
+                        if isinstance(e, ast.Lambda):
+                            out.add(id(e))
+                        elif isinstance(e, ast.Name) and e.id in by_name:
+                            for fn in by_name[e.id]:
+                                out.add(id(fn))
+    return out
+
+
+def _find_contexts(tree: ast.AST) -> List[tuple]:
+    """Top-level traced contexts as (fn_node, strict, tainted_params).
+
+    Nested FunctionDefs inside another context are walked by their parent
+    (inheriting closure taint) and are not returned separately.
+    """
+    callbacks = _lax_callback_ids(tree)
+    contexts: List[tuple] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            jit = None
+            for dec in node.decorator_list:
+                jit = jit or _is_jit_decorator(dec)
+            if jit is not None:
+                static = _static_argnames(jit) | {"cfg", "config"}
+                contexts.append((node, True, _all_params(node) - static))
+            elif id(node) in callbacks:
+                contexts.append((node, True, _all_params(node)))
+            else:
+                tp = _table_params(node)
+                if tp:
+                    contexts.append((node, False, tp))
+        elif isinstance(node, ast.Lambda) and id(node) in callbacks:
+            contexts.append((node, True, _all_params(node)))
+    # drop contexts nested inside another context (parent walk covers them,
+    # with closure taint the standalone analysis would miss)
+    ctx_nodes = [c[0] for c in contexts]
+    nested: Set[int] = set()
+    for fn in ctx_nodes:
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef)) and any(
+                    sub is c for c in ctx_nodes):
+                nested.add(id(sub))
+    return [(fn, s, t) for fn, s, t in contexts if id(fn) not in nested]
+
+
+# ---------------------------------------------------------------------------
+# Taint propagation + sink detection within one context
+# ---------------------------------------------------------------------------
+
+
+class _Taint:
+    def __init__(self, sf: SourceFile, strict: bool, tainted: Set[str],
+                 out: List[Violation], callbacks: Set[int]):
+        self.sf = sf
+        self.strict = strict
+        self.tainted = set(tainted)
+        self.out = out
+        self.callbacks = callbacks
+
+    # -- expression taint ---------------------------------------------------
+    def is_tainted(self, e: ast.expr) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in SHAPE_ATTRS:
+                return False
+            return self.is_tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.is_tainted(e.value) or self.is_tainted(e.slice)
+        if isinstance(e, ast.Call):
+            d = dotted(e.func)
+            if d in LAUNDER_CALLS:
+                return False                     # explicit host transfer
+            if d and (d.startswith(TAINT_ROOTS) or d.split(".")[0] in
+                      ("jnp", "lax")):
+                return True
+            if self.is_tainted(e.func):
+                return True
+            return any(self.is_tainted(a) for a in e.args) or any(
+                self.is_tainted(k.value) for k in e.keywords)
+        if isinstance(e, ast.BinOp):
+            return self.is_tainted(e.left) or self.is_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.is_tainted(e.operand)
+        if isinstance(e, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+                return False      # `x is None` is static at trace time
+            return self.is_tainted(e.left) or any(
+                self.is_tainted(c) for c in e.comparators)
+        if isinstance(e, ast.BoolOp):
+            return any(self.is_tainted(v) for v in e.values)
+        if isinstance(e, ast.IfExp):
+            return self.is_tainted(e.body) or self.is_tainted(e.orelse)
+        if isinstance(e, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(x) for x in e.elts)
+        if isinstance(e, ast.Starred):
+            return self.is_tainted(e.value)
+        return False
+
+    # -- sinks --------------------------------------------------------------
+    def _flag(self, rule: str, node: ast.AST, msg: str):
+        self.out.append(Violation(rule, str(self.sf.path), node.lineno, msg))
+
+    def check_expr_sinks(self, e: ast.expr):
+        for node in ast.walk(e):
+            if isinstance(node, ast.Lambda):
+                continue
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                fn_tail = tail(node.func)
+                args_tainted = any(self.is_tainted(a) for a in node.args)
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in HOST_CONVERSIONS and args_tainted):
+                    self._flag(
+                        "tracer-leak", node,
+                        f"{node.func.id}() applied to a traced value inside "
+                        "a jitted context — bakes the tracer into a Python "
+                        "scalar (or raises ConcretizationTypeError)")
+                if (fn_tail == "item" and isinstance(node.func, ast.Attribute)
+                        and self.is_tainted(node.func.value)):
+                    self._flag(
+                        "tracer-leak", node,
+                        ".item() on a traced value inside a jitted context — "
+                        "forces a device sync and breaks tracing")
+                if self.strict and (
+                        d in SYNC_CALLS
+                        or (fn_tail == "block_until_ready"
+                            and isinstance(node.func, ast.Attribute))):
+                    self._flag(
+                        "host-sync", node,
+                        f"hidden host sync ({d or fn_tail}) inside a jitted "
+                        "context / lax loop body — serializes the hot loop")
+            elif isinstance(node, ast.BoolOp):
+                if any(self.is_tainted(v) for v in node.values):
+                    op = "and" if isinstance(node.op, ast.And) else "or"
+                    self._flag(
+                        "tracer-leak", node,
+                        f"Python `{op}` over a traced value — use `&`/`|` "
+                        "(jnp.logical_*) inside jitted code")
+            elif (isinstance(node, ast.UnaryOp)
+                  and isinstance(node.op, ast.Not)
+                  and self.is_tainted(node.operand)):
+                self._flag(
+                    "tracer-leak", node,
+                    "Python `not` on a traced value — use `~` inside "
+                    "jitted code")
+
+    # -- statement walk -----------------------------------------------------
+    def _assign_names(self, target: ast.expr) -> List[str]:
+        if isinstance(target, ast.Name):
+            return [target.id]
+        if isinstance(target, (ast.Tuple, ast.List)):
+            out = []
+            for e in target.elts:
+                out.extend(self._assign_names(e))
+            return out
+        return []
+
+    def run(self, body: List[ast.stmt]):
+        # propagation passes to fixpoint (names assigned late in a loop body
+        # taint earlier uses on the next iteration), then one checking pass
+        for _ in range(4):
+            before = set(self.tainted)
+            self._walk(body, check=False)
+            if self.tainted == before:
+                break
+        self._walk(body, check=True)
+
+    def _walk(self, body: List[ast.stmt], check: bool):
+        for stmt in body:
+            self._stmt(stmt, check)
+
+    def _stmt(self, stmt: ast.stmt, check: bool):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested function: traced callback params are tainted; the body
+            # inherits the enclosing closure's taint.  strictness upgrades
+            # when the nested fn is a lax callback.
+            strict = self.strict or id(stmt) in self.callbacks
+            sub = _Taint(self.sf, strict,
+                         self.tainted | _all_params(stmt),
+                         self.out if check else [], self.callbacks)
+            sub._walk(stmt.body, check)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is None:
+                return
+            if check:
+                self.check_expr_sinks(value)
+            t = self.is_tainted(value)
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for tgt in targets:
+                for name in self._assign_names(tgt):
+                    if t:
+                        self.tainted.add(name)
+                    elif not isinstance(stmt, ast.AugAssign):
+                        self.tainted.discard(name)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            if check:
+                if self.is_tainted(stmt.test):
+                    kind = "if" if isinstance(stmt, ast.If) else "while"
+                    self._flag(
+                        "tracer-leak", stmt,
+                        f"Python `{kind}` on a traced value (derived from a "
+                        "JobTable column or a jnp/lax op) inside a jitted "
+                        "context — use jnp.where / lax.cond")
+                self.check_expr_sinks(stmt.test)
+            self._walk(stmt.body, check)
+            self._walk(stmt.orelse, check)
+            return
+        if isinstance(stmt, ast.Assert):
+            if check:
+                if self.is_tainted(stmt.test):
+                    self._flag(
+                        "tracer-leak", stmt,
+                        "Python `assert` on a traced value inside a jitted "
+                        "context — use checkify or move the check host-side")
+                self.check_expr_sinks(stmt.test)
+            return
+        if isinstance(stmt, ast.For):
+            if check:
+                self.check_expr_sinks(stmt.iter)
+            if self.is_tainted(stmt.iter):
+                for name in self._assign_names(stmt.target):
+                    self.tainted.add(name)
+            self._walk(stmt.body, check)
+            self._walk(stmt.orelse, check)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)):
+            if check and stmt.value is not None:
+                self.check_expr_sinks(stmt.value)
+            return
+        if isinstance(stmt, ast.With):
+            if check:
+                for item in stmt.items:
+                    self.check_expr_sinks(item.context_expr)
+            self._walk(stmt.body, check)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk(stmt.body, check)
+            for h in stmt.handlers:
+                self._walk(h.body, check)
+            self._walk(stmt.orelse, check)
+            self._walk(stmt.finalbody, check)
+            return
+
+
+def _run_taint(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+    callbacks = _lax_callback_ids(sf.tree)
+    for fn, strict, tainted in _find_contexts(sf.tree):
+        if isinstance(fn, ast.Lambda):
+            body = [ast.Expr(value=fn.body, lineno=fn.lineno, col_offset=0)]
+        else:
+            body = fn.body
+        _Taint(sf, strict, tainted, out, callbacks).run(body)
+    return out
+
+
+@register(
+    "tracer-leak", "file",
+    "Python control flow / host conversions on traced JobTable values "
+    "inside jitted contexts")
+def check_tracer_leak(sf: SourceFile) -> List[Violation]:
+    return [v for v in _run_taint(sf) if v.rule == "tracer-leak"]
+
+
+@register(
+    "host-sync", "file",
+    "np.asarray / device_get / block_until_ready inside jitted contexts")
+def check_host_sync(sf: SourceFile) -> List[Violation]:
+    return [v for v in _run_taint(sf) if v.rule == "host-sync"]
+
+
+def _contains_float_or_div(expr: ast.expr) -> Optional[ast.AST]:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Div):
+            return node
+        if isinstance(node, ast.Constant) and isinstance(node.value, float):
+            return node
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Name) and node.func.id == "float":
+                return node
+            if (tail(node.func) == "astype" and node.args
+                    and "float" in str(dotted(node.args[0]) or "")):
+                return node
+        if isinstance(node, ast.Attribute) and node.attr in (
+                "float32", "float64", "float16", "bfloat16"):
+            return node
+    return None
+
+
+@register(
+    "cost-grid", "file",
+    "float literals / true division / float casts reaching the /256 "
+    "integer cost grid (cost_* columns, CRCostModel evaluation)")
+def check_cost_grid(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, where: str):
+        out.append(Violation(
+            "cost-grid", str(sf.path), node.lineno,
+            f"float/true-division reaches the integer /256 cost grid "
+            f"({where}) — use integer arithmetic "
+            "(`(a + b - 1) // b` for ceil) so both backends stay "
+            "bit-identical"))
+
+    for node in ast.walk(sf.tree):
+        # writes into grid-named columns/keywords (JobTable(...), _replace,
+        # update_state_mib scatters, plain assignments)
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in GRID_NAMES:
+                    bad = _contains_float_or_div(kw.value)
+                    if bad is not None:
+                        flag(bad, f"keyword `{kw.arg}`")
+        elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            names = {tail(t) for t in targets}
+            hit = names & GRID_NAMES
+            if hit and node.value is not None:
+                bad = _contains_float_or_div(node.value)
+                if bad is not None:
+                    flag(bad, f"assignment to `{sorted(hit)[0]}`")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in GRID_FUNCTIONS:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.BinOp) and isinstance(
+                            sub.op, ast.Div):
+                        flag(sub, f"cost function `{node.name}`")
+                    elif isinstance(sub, ast.Constant) and isinstance(
+                            sub.value, float):
+                        flag(sub, f"cost function `{node.name}`")
+    return out
+
+
+@register("mutable-default", "file",
+          "mutable default argument shared across calls")
+def check_mutable_default(sf: SourceFile) -> List[Violation]:
+    out: List[Violation] = []
+    mutable_calls = {"list", "dict", "set", "OrderedDict", "defaultdict"}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        for default in list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]:
+            bad = isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                isinstance(default, ast.Call)
+                and tail(default.func) in mutable_calls)
+            if bad:
+                name = getattr(node, "name", "<lambda>")
+                out.append(Violation(
+                    "mutable-default", str(sf.path), default.lineno,
+                    f"mutable default argument in `{name}` is shared across "
+                    "calls — default to None and construct inside"))
+    return out

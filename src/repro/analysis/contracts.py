@@ -1,0 +1,175 @@
+"""Backend-contract drift checks over the live policy registry + JobTable.
+
+Two contracts hold the two-backend design together (DESIGN.md §Engine):
+
+* **backend-contract** — every policy registered in `core.engine.POLICIES`
+  must carry BOTH a Python pass and a JAX-pass factory that actually
+  produce callables, and must be exercised by the cross-backend property
+  suite (`tests/test_policies_equivalence.py`).  A policy added to the
+  registry without an equivalence test is exactly how the backends drift
+  apart silently.
+* **column-dataflow** — every `JobTable` column written by
+  `table_from_jobs` must be consumed (attribute-read) somewhere in
+  ``src/repro``, and every column name passed to ``JobTable(...)`` /
+  ``tbl._replace(...)`` must be a declared field.  A written-never-read
+  column is dead state bloating the fixed-size table; a read-never-written
+  column is a latent AttributeError.
+
+These import the live modules (registry contents are runtime data), so they
+run as *project* rules against the repo root.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List
+
+from repro.analysis.base import SourceFile, Violation, register
+
+EQUIV_TEST = Path("tests/test_policies_equivalence.py")
+OMFS_JAX = Path("src/repro/core/omfs_jax.py")
+ENGINE = Path("src/repro/core/engine.py")
+SRC = Path("src/repro")
+
+
+def _test_covers_registry(test_src: str) -> bool:
+    """True when the equivalence suite derives its policy list from the
+    registry itself (``engine.POLICIES``) — then every future policy is
+    covered by construction."""
+    tree = ast.parse(test_src)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "POLICIES":
+            return True
+        if isinstance(node, ast.Name) and node.id == "POLICIES":
+            return True
+    return False
+
+
+@register(
+    "backend-contract", "project",
+    "every registered policy has a Python pass, a JAX factory, and "
+    "equivalence-test coverage")
+def check_backend_contract(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    from repro.core import engine
+
+    engine_path = str(root / ENGINE)
+    for name, spec in sorted(engine.POLICIES.items()):
+        if not callable(spec.python_pass):
+            out.append(Violation(
+                "backend-contract", engine_path, 1,
+                f"policy {name!r}: python_pass is not callable"))
+        try:
+            jax_pass = spec.jax_factory(None)
+        except Exception as e:  # registry entry must build without args
+            out.append(Violation(
+                "backend-contract", engine_path, 1,
+                f"policy {name!r}: jax_factory(None) raised {e!r}"))
+            continue
+        if not callable(jax_pass):
+            out.append(Violation(
+                "backend-contract", engine_path, 1,
+                f"policy {name!r}: jax_factory(None) returned a "
+                "non-callable"))
+
+    test_path = root / EQUIV_TEST
+    if not test_path.exists():
+        out.append(Violation(
+            "backend-contract", str(test_path), 1,
+            "cross-backend equivalence suite is missing"))
+        return out
+    test_src = test_path.read_text()
+    if not _test_covers_registry(test_src):
+        for name in sorted(engine.POLICIES):
+            if f'"{name}"' not in test_src and f"'{name}'" not in test_src:
+                out.append(Violation(
+                    "backend-contract", str(test_path), 1,
+                    f"policy {name!r} is registered in core/engine.py but "
+                    "never exercised by the Python-vs-JAX equivalence suite "
+                    "(parametrize over engine.POLICIES or name it "
+                    "explicitly)"))
+    return out
+
+
+def _jobtable_fields(root: Path) -> List[str]:
+    from repro.core.omfs_jax import JobTable
+    return list(JobTable._fields)
+
+
+@register(
+    "column-dataflow", "project",
+    "every JobTable column built by table_from_jobs is consumed somewhere, "
+    "and every written column is a declared field")
+def check_column_dataflow(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    fields = set(_jobtable_fields(root))
+    omfs_jax_path = root / OMFS_JAX
+
+    # -- writes: keywords of JobTable(...) and *._replace(...) --------------
+    built_in_table_from_jobs: set = set()
+    for py in sorted((root / SRC).rglob("*.py")):
+        try:
+            sf = SourceFile(py)
+        except SyntaxError:
+            continue
+        enclosing_fn = {}
+        for fn in ast.walk(sf.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(fn):
+                    enclosing_fn.setdefault(id(sub), fn.name)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            is_ctor = isinstance(node.func, ast.Name) and \
+                node.func.id == "JobTable"
+            is_replace = isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "_replace"
+            if not (is_ctor or is_replace):
+                continue
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                if kw.arg not in fields and is_ctor:
+                    out.append(Violation(
+                        "column-dataflow", str(py), kw.value.lineno,
+                        f"JobTable(...) writes unknown column {kw.arg!r} — "
+                        "not a declared field"))
+                if (is_ctor and enclosing_fn.get(id(node)) ==
+                        "table_from_jobs"):
+                    built_in_table_from_jobs.add(kw.arg)
+
+    missing_init = fields - built_in_table_from_jobs
+    if built_in_table_from_jobs and missing_init:
+        out.append(Violation(
+            "column-dataflow", str(omfs_jax_path), 1,
+            f"JobTable column(s) {sorted(missing_init)} are declared but "
+            "never initialized by table_from_jobs"))
+
+    # -- reads: tbl.<col> attribute loads anywhere in src/repro -------------
+    consumed: set = set()
+    for py in sorted((root / SRC).rglob("*.py")):
+        try:
+            tree = ast.parse(py.read_text())
+        except SyntaxError:
+            continue
+        skip_ranges = []
+        if py == omfs_jax_path:
+            # the class declaration and the constructor call in
+            # table_from_jobs are writes, not consumption
+            for node in ast.walk(tree):
+                if isinstance(node, ast.ClassDef) and node.name == "JobTable":
+                    skip_ranges.append((node.lineno, node.end_lineno))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and isinstance(
+                    node.ctx, ast.Load) and node.attr in fields:
+                if any(a <= node.lineno <= b for a, b in skip_ranges):
+                    continue
+                consumed.add(node.attr)
+
+    for col in sorted(fields - consumed):
+        out.append(Violation(
+            "column-dataflow", str(omfs_jax_path), 1,
+            f"JobTable column {col!r} is written by table_from_jobs but "
+            "never read anywhere in src/repro — dead state in the "
+            "fixed-size table"))
+    return out

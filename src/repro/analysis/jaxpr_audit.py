@@ -1,0 +1,235 @@
+"""Jaxpr auditor: trace the jitted passes and assert what the AST can't see.
+
+Three trace-level invariants:
+
+* **jaxpr-float-cast** — tracing every registered policy pass (tiered
+  config, so placement machinery is live) must produce NO
+  ``convert_element_type`` from an integer to a floating dtype, and every
+  output `JobTable` column must still be integer-typed.  A float sneaking
+  into the /256 cost grid mid-pass rounds differently than the Python
+  backend's integer arithmetic — schedules drift without a test failing.
+* **branch-confinement** — in the incremental OMFS passes the expensive
+  eviction machinery (the victim ``sort``/lexsort and the placement
+  ``scan``) must stay confined under a ``lax.cond``/``switch`` branch
+  inside the per-queue-position loop.  Hoisted onto the always-taken path
+  it still produces identical schedules — only ~10x slower (the whole
+  point of the incremental pass, ROADMAP "11k ticks/s").
+* **retrace** — the compile-counter harness: a second
+  ``engine.simulate`` / ``engine.simulate_matrix`` call with same-shaped
+  inputs, and a tick after ``update_state_mib``, must all hit the
+  compilation cache (``_cache_size() == 1``).  A retrace per tick/call
+  silently turns throughput into compile time.
+
+The audit builds one small deterministic workload (J=12, two tiers with a
+tight fast tier so spilling actually happens) and traces the real
+registered passes — no fixtures, no mocks.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.analysis.base import Violation, register
+
+ENGINE = "src/repro/core/engine.py"
+OMFS_JAX = "src/repro/core/omfs_jax.py"
+
+#: policies whose per-queue-position loop must keep eviction machinery
+#: behind a cond (backfill's once-per-tick reservation sort is by design)
+CONFINED_POLICIES = ("omfs", "omfs_cheap_victim")
+
+_FIXTURE_CACHE: Dict[str, object] = {}
+
+
+def _fixture():
+    """(users, jobs, cfg, tbl, ent) — small, deterministic, tiered."""
+    if "fx" in _FIXTURE_CACHE:
+        return _FIXTURE_CACHE["fx"]
+    from repro.core import omfs_jax
+    from repro.core.crcost import CRCostModel, TieredCRCostModel, UNBOUNDED
+    from repro.core.types import SchedulerConfig
+    from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+    spec = WorkloadSpec(n_users=3, horizon=40, cpu_total=16, seed=7,
+                        arrival_rate=0.3, mean_work=12,
+                        class_mix=(0.1, 0.2, 0.7))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:12]
+    tiers = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256),
+               CRCostModel(save_mib_per_tick=32, restore_mib_per_tick=32,
+                           save_base=1, restore_base=1)),
+        capacity_mib=(64, UNBOUNDED))
+    cfg = SchedulerConfig(cpu_total=16, quantum=2, cr_overhead=1,
+                          cr_tiers=tiers)
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)
+    _FIXTURE_CACHE["fx"] = (users, jobs, cfg, tbl, ent)
+    return _FIXTURE_CACHE["fx"]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _sub_jaxprs(eqn):
+    """(param_name, jaxpr) pairs for every sub-jaxpr of an equation."""
+    import jax.core as jcore
+
+    out = []
+    for k, v in eqn.params.items():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for x in vals:
+            if isinstance(x, jcore.ClosedJaxpr):
+                out.append((k, x.jaxpr))
+            elif isinstance(x, jcore.Jaxpr):
+                out.append((k, x))
+    return out
+
+
+def _walk_eqns(jaxpr, path=()):
+    """Yield (eqn, path) for every equation, path = primitive-name ancestry."""
+    for eqn in jaxpr.eqns:
+        yield eqn, path
+        for _, sub in _sub_jaxprs(eqn):
+            yield from _walk_eqns(sub, path + (eqn.primitive.name,))
+
+
+def _trace_pass(name: str):
+    """ClosedJaxpr of one registered policy pass over the fixture table."""
+    import jax
+
+    from repro.core import engine
+    _, _, cfg, tbl, ent = _fixture()
+    pass_fn = engine.POLICIES[name].jax_factory(None)
+    t0 = None
+
+    def run(tbl, t):
+        return pass_fn(cfg, ent, t, tbl)
+
+    import jax.numpy as jnp
+    t0 = jnp.int32(3)
+    return jax.make_jaxpr(run)(tbl, t0)
+
+
+def _is_float(dtype) -> bool:
+    import numpy as np
+    return np.issubdtype(dtype, np.floating)
+
+
+def _is_int(dtype) -> bool:
+    import numpy as np
+    return np.issubdtype(dtype, np.integer) or np.issubdtype(dtype, np.bool_)
+
+
+@register(
+    "jaxpr-float-cast", "trace",
+    "no int->float convert_element_type inside any policy pass; JobTable "
+    "cost/occupancy columns stay integer end-to-end")
+def check_float_casts(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    from repro.core import engine
+
+    for name in sorted(engine.POLICIES):
+        closed = _trace_pass(name)
+        for eqn, _path in _walk_eqns(closed.jaxpr):
+            if eqn.primitive.name != "convert_element_type":
+                continue
+            new = eqn.params.get("new_dtype")
+            src = eqn.invars[0].aval.dtype if eqn.invars else None
+            if new is not None and _is_float(new) and (
+                    src is None or _is_int(src)):
+                out.append(Violation(
+                    "jaxpr-float-cast", str(root / ENGINE), 1,
+                    f"policy {name!r}: traced pass converts {src} -> {new} "
+                    "— a float entering the integer cost grid breaks "
+                    "cross-backend bit-equality"))
+        for aval in closed.out_avals:
+            if hasattr(aval, "dtype") and _is_float(aval.dtype):
+                out.append(Violation(
+                    "jaxpr-float-cast", str(root / ENGINE), 1,
+                    f"policy {name!r}: pass output column has floating "
+                    f"dtype {aval.dtype}; JobTable columns must stay "
+                    "integer"))
+    return out
+
+
+@register(
+    "branch-confinement", "trace",
+    "victim sort + placement scan stay under lax.cond in the incremental "
+    "OMFS passes (not hoisted onto the always-taken path)")
+def check_branch_confinement(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    loops = {"while", "scan", "fori"}
+    for name in CONFINED_POLICIES:
+        closed = _trace_pass(name)
+        for eqn, path in _walk_eqns(closed.jaxpr):
+            if eqn.primitive.name not in ("sort", "scan"):
+                continue
+            in_loop = any(p in loops for p in path)
+            if not in_loop:
+                continue        # the once-per-tick queue_order sort is fine
+            after_loop = path[max(i for i, p in enumerate(path)
+                                  if p in loops):]
+            if not any(p in ("cond", "switch") for p in after_loop):
+                out.append(Violation(
+                    "branch-confinement", str(root / OMFS_JAX), 1,
+                    f"policy {name!r}: `{eqn.primitive.name}` runs on the "
+                    "always-taken path of the per-queue-position loop "
+                    f"(ancestry {'->'.join(path)}) — eviction machinery "
+                    "must stay behind the lax.cond eviction branch"))
+    return out
+
+
+@register(
+    "retrace", "trace",
+    "repeat simulate / simulate_matrix and update_state_mib hit the "
+    "compilation cache (compile exactly once)")
+def check_retrace(root: Path) -> List[Violation]:
+    out: List[Violation] = []
+    from repro.core import engine, omfs_jax
+
+    users, jobs, cfg, tbl, ent = _fixture()
+    horizon = 25
+    engine_path = str(root / ENGINE)
+
+    def cache_size(jitted) -> Optional[int]:
+        get = getattr(jitted, "_cache_size", None)
+        return get() if get is not None else None
+
+    # -- repeat simulate: one compile for two same-shaped calls -------------
+    engine.simulate(users, jobs, cfg, horizon, policy="omfs", backend="jax")
+    engine.simulate(users, jobs, cfg, horizon, policy="omfs", backend="jax")
+    pass_fn = engine.POLICIES["omfs"].jax_factory(None)
+    runner = engine._jitted_runner(cfg, pass_fn, horizon)
+    n = cache_size(runner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"repeat simulate(policy='omfs') compiled {n} times for "
+            "same-shaped inputs — expected exactly 1 (a retrace per call "
+            "destroys tick throughput)"))
+
+    # -- update_state_mib must not invalidate the compiled scan -------------
+    tbl2 = omfs_jax.update_state_mib(tbl, 0, 777, cfg)
+    runner(tbl2, ent)
+    n = cache_size(runner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", str(root / OMFS_JAX), 1,
+            f"update_state_mib triggered a retrace (cache size {n}) — it "
+            "must be O(1) scatters with unchanged shapes/dtypes"))
+
+    # -- repeat simulate_matrix: one compile for the whole policy union -----
+    names = sorted(engine.POLICIES)
+    engine.simulate_matrix(users, jobs, cfg, horizon, names)
+    engine.simulate_matrix(users, jobs, cfg, horizon, names)
+    pass_fns = tuple(engine.POLICIES[p].jax_factory(None) for p in names)
+    mrunner = engine._jitted_matrix_runner(cfg, pass_fns, horizon)
+    n = cache_size(mrunner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"repeat simulate_matrix compiled {n} times — the policy "
+            "matrix must share ONE compiled lax.switch scan"))
+    return out

@@ -19,6 +19,7 @@ capacity-bounded LRU on the fast tier (DCPMM is small — same constraint).
 from __future__ import annotations
 
 import shutil
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -106,6 +107,9 @@ class DiskTier:
         self.root.mkdir(parents=True, exist_ok=True)
         self.compress = compress
         self.stats = TierStats()
+        # save_leaves runs on the AsyncCheckpointer writer thread while the
+        # caller thread saves/restores concurrently; stats is shared.
+        self._lock = threading.Lock()
 
     def _dir(self, name: str) -> Path:
         return self.root / name
@@ -113,10 +117,11 @@ class DiskTier:
     def save(self, name: str, tree) -> None:
         t0 = time.perf_counter()
         manifest = serialize.save_tree(tree, self._dir(name), compress=self.compress)
-        self.stats.saves += 1
-        self.stats.bytes_written += sum(
-            m["nbytes_stored"] for m in manifest["leaves"].values())
-        self.stats.save_seconds += time.perf_counter() - t0
+        with self._lock:
+            self.stats.saves += 1
+            self.stats.bytes_written += sum(
+                m["nbytes_stored"] for m in manifest["leaves"].values())
+            self.stats.save_seconds += time.perf_counter() - t0
 
     def save_leaves(self, name: str, leaves: Dict[str, np.ndarray]) -> None:
         """Persist an already-snapshotted MemTier entry (promotion) —
@@ -124,17 +129,19 @@ class DiskTier:
         t0 = time.perf_counter()
         manifest = serialize.save_leaf_dict(
             leaves, self._dir(name), compress=self.compress)
-        self.stats.saves += 1
-        self.stats.bytes_written += sum(
-            m["nbytes_stored"] for m in manifest["leaves"].values())
-        self.stats.save_seconds += time.perf_counter() - t0
+        with self._lock:
+            self.stats.saves += 1
+            self.stats.bytes_written += sum(
+                m["nbytes_stored"] for m in manifest["leaves"].values())
+            self.stats.save_seconds += time.perf_counter() - t0
 
     def restore(self, name: str) -> Dict[str, np.ndarray]:
         t0 = time.perf_counter()
         leaves = serialize.load_leaves(self._dir(name))
-        self.stats.restores += 1
-        self.stats.bytes_read += sum(a.nbytes for a in leaves.values())
-        self.stats.restore_seconds += time.perf_counter() - t0
+        with self._lock:
+            self.stats.restores += 1
+            self.stats.bytes_read += sum(a.nbytes for a in leaves.values())
+            self.stats.restore_seconds += time.perf_counter() - t0
         return leaves
 
     def __contains__(self, name: str) -> bool:

@@ -1,0 +1,41 @@
+"""Negative fixture: correct idioms only — the analyzer must report ZERO
+violations for this file."""
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def branchless(tbl):
+    need = jnp.maximum(tbl.cpus - 4, 0)
+    return lax.cond(jnp.any(need > 0).astype(bool).dtype == jnp.bool_.dtype,
+                    lambda t: t, lambda t: t, tbl)
+
+
+@jax.jit
+def static_shapes(tbl, cfg):
+    # cfg is a static jit arg; shape/dtype reads are trace-time constants
+    if cfg.cpu_total > 8:
+        k = tbl.cpus.shape[0]
+        return jnp.zeros((k,), dtype=tbl.cpus.dtype)
+    return tbl.cpus
+
+
+def integer_grid(jobs, JobTable):
+    return JobTable(cost_save=(jobs.mib + 255) // 256)
+
+
+class GuardedCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def read(self):
+        with self._lock:
+            return self.count

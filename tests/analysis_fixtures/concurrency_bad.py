@@ -1,0 +1,40 @@
+"""Seeded thread-shared-state + lock-order violations (exact lines
+asserted by the test)."""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class Writer:
+    def __init__(self):
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._lock = threading.Lock()
+        self.count = 0
+        self.log = []
+
+    def start(self, payload):
+        return self._pool.submit(self._write, payload)
+
+    def _write(self, payload):
+        self.count += 1                    # line 18: thread-shared-state
+        self.log = self.log + [payload]    # line 19: thread-shared-state
+
+    def snapshot(self):
+        self.count = 0                     # line 22: thread-shared-state
+        return list(self.log)
+
+
+class Deadlocker:
+    def __init__(self):
+        self.a_lock = threading.Lock()
+        self.b_lock = threading.Lock()
+        self.x = 0
+
+    def ab(self):
+        with self.a_lock:
+            with self.b_lock:              # line 34: lock-order (a->b)
+                self.x += 1
+
+    def ba(self):
+        with self.b_lock:
+            with self.a_lock:              # line 39: lock-order (b->a)
+                self.x -= 1

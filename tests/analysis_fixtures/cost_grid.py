@@ -1,0 +1,21 @@
+"""Seeded cost-grid violations: floats / true division reaching the /256
+integer cost grid (exact lines asserted by the test)."""
+
+
+def build(jobs, JobTable):
+    cost_save = jobs.mib / 256             # line 5: cost-grid true division
+    return JobTable(
+        cost_save=cost_save,
+        cost_restore=jobs.mib * 1.5,       # line 8: cost-grid float literal
+    )
+
+
+def save_cost(mib, rate):
+    return float(mib) / rate               # line 13: cost-grid in grid fn
+
+
+def fine(jobs, JobTable):
+    return JobTable(
+        cost_save=(jobs.mib + 255) // 256,   # integer ceil-div: clean
+        cost_restore=jobs.mib // 256,
+    )

@@ -1,0 +1,18 @@
+"""Seeded host-sync violations (exact lines asserted by the test)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def hidden_syncs(tbl):
+    occ = jnp.cumsum(tbl.cpus)
+    host = np.asarray(occ)                 # line 10: host-sync np.asarray
+    occ.block_until_ready()                # line 11: host-sync block_until_ready
+    return host
+
+
+def host_side_helper(tbl):
+    # soft context: an explicit host transfer here is the *point* of the
+    # helper (signature_from_table does exactly this) — clean.
+    return np.asarray(jax.device_get(tbl.cpus)).tolist()

@@ -1,0 +1,17 @@
+"""Suppression mechanics fixture (exact lines asserted by the test)."""
+
+
+def tolerated(x, acc=[]):  # analysis: ignore[mutable-default] -- fixture: valid suppression
+    return acc + [x]
+
+
+def unused_suppression(x):
+    return x + 1  # analysis: ignore[tracer-leak] -- nothing to suppress here
+
+
+def missing_reason(x, acc=[]):  # analysis: ignore[mutable-default]
+    return acc + [x]
+
+
+def unknown_rule(x):
+    return x  # analysis: ignore[no-such-rule] -- bogus rule id

@@ -1,0 +1,44 @@
+"""Seeded tracer-leak violations — every flagged line is asserted exactly
+by tests/test_analysis.py; renumbering lines requires updating the test."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_branch(tbl):
+    x = jnp.sum(tbl.cpus)
+    if x > 0:                              # line 10: tracer-leak (if)
+        return x
+    return -x
+
+
+@jax.jit
+def bad_conversions(tbl):
+    n = int(jnp.sum(tbl.work))             # line 17: tracer-leak int()
+    flag = bool(tbl.state[0])              # line 18: tracer-leak bool()
+    v = jnp.max(tbl.priority).item()       # line 19: tracer-leak .item()
+    return n + int(flag) + v
+
+
+def soft_context(tbl):
+    # no @jit, but a JobTable param: still a leak when branching on columns
+    while jnp.any(tbl.state == 1):         # line 26: tracer-leak (while)
+        tbl = tbl._replace(state=tbl.state * 0)
+    return tbl
+
+
+@jax.jit
+def fine(tbl):
+    x = jnp.sum(tbl.cpus)
+    y = jnp.where(x > 0, x, -x)            # branchless: clean
+    if tbl.cpus.shape[0] > 4:              # shape is static: clean
+        y = y + 1
+    return y
+
+
+def host_epilogue(tbl):
+    # soft context + explicit device_get laundering: clean
+    total = int(jax.device_get(jnp.sum(tbl.cpus)))
+    if total > 0:
+        return total
+    return 0

@@ -1,13 +1,22 @@
-"""Test-suite bootstrap: fall back to the deterministic hypothesis stub.
+"""Test-suite bootstrap: hypothesis-stub fallback + known-failure xfails.
 
 `hypothesis` is a declared test dependency (pyproject.toml), but the suite
 must still collect in hermetic containers where installing is impossible —
 without this, every property-test module dies at import time.  The stub
 (`tests/_hypothesis_stub.py`) draws a fixed seeded example set per test;
 with the real package installed this file is a no-op.
+
+The collection hook applies ``tests/known_failures.toml`` (the triaged
+kernel/multidevice gaps) as **strict** xfails: a listed test that starts
+passing fails the run — stale entries cannot linger — and an unlisted test
+that breaks fails normally.  The registry format itself is validated by
+``python -m repro.analysis`` (rule: known-failures).
 """
 import os
 import sys
+from pathlib import Path
+
+import pytest
 
 try:
     import hypothesis  # noqa: F401
@@ -18,3 +27,27 @@ except ModuleNotFoundError:
     _hyp, _st = _hypothesis_stub.as_modules()
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _known_failures():
+    from repro.analysis.known_failures import load_known_failures
+
+    return load_known_failures(_REPO_ROOT)
+
+
+def pytest_collection_modifyitems(config, items):
+    try:
+        known = _known_failures()
+    except FileNotFoundError:
+        return
+    for item in items:
+        nodeid = item.nodeid.replace("\\", "/")
+        if not nodeid.startswith("tests/"):
+            nodeid = "tests/" + nodeid.lstrip("./")
+        reason = known.get(nodeid)
+        if reason is not None:
+            item.add_marker(pytest.mark.xfail(
+                strict=True,
+                reason=f"known failure (tests/known_failures.toml): {reason}"))

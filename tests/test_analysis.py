@@ -1,0 +1,162 @@
+"""Analyzer self-tests: every rule fires on its seeded fixture at the
+exact line, stays silent on the clean fixture, and the CLI exit codes +
+suppression mechanics behave.
+
+The fixtures live in ``tests/analysis_fixtures/`` (excluded from the
+default ``src/repro`` scan).  Assertions pin ``(rule, line)`` pairs, so
+editing a fixture means re-pinning here — deliberate: the analyzer's
+output location is part of its contract (CI step summaries link to it).
+"""
+from pathlib import Path
+
+import pytest
+
+from repro import analysis
+from repro.analysis import known_failures
+from repro.analysis.base import RULES, SourceFile, known_rule_ids
+from repro.analysis.concurrency import analyze_concurrency
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+
+
+def run_file_rules(*names):
+    violations, _ = analysis.collect_violations(
+        REPO, targets=[FIXTURES / n for n in names],
+        include_trace=False, include_project=False)
+    return sorted((v.rule, v.line) for v in violations)
+
+
+def test_registry_is_complete():
+    assert sorted(RULES) == [
+        "backend-contract", "branch-confinement", "column-dataflow",
+        "cost-grid", "host-sync", "jaxpr-float-cast", "known-failures",
+        "lock-order", "mutable-default", "retrace", "thread-shared-state",
+        "tracer-leak"]
+    assert "suppression" in known_rule_ids()
+    for rule in RULES.values():
+        assert rule.kind in ("file", "project", "trace")
+        assert rule.doc
+
+
+def test_tracer_leak_fixture_exact_lines():
+    assert run_file_rules("tracer_leak.py") == [
+        ("tracer-leak", 10),     # if on traced value
+        ("tracer-leak", 17),     # int()
+        ("tracer-leak", 18),     # bool()
+        ("tracer-leak", 19),     # .item()
+        ("tracer-leak", 20),     # int(flag) — taint flows through flag
+        ("tracer-leak", 25),     # while on traced value (soft context)
+    ]
+
+
+def test_host_sync_fixture_exact_lines():
+    assert run_file_rules("host_sync.py") == [
+        ("host-sync", 10),       # np.asarray inside jit
+        ("host-sync", 11),       # .block_until_ready inside jit
+    ]
+
+
+def test_cost_grid_fixture_exact_lines():
+    assert run_file_rules("cost_grid.py") == [
+        ("cost-grid", 6),        # true division assigned to cost_save
+        ("cost-grid", 9),        # float literal in JobTable keyword
+        ("cost-grid", 14),       # float() inside a grid cost function
+    ]
+
+
+def test_mutable_default_fixture_exact_lines():
+    assert run_file_rules("mutable_default.py") == [
+        ("mutable-default", 4),
+        ("mutable-default", 9),
+        ("mutable-default", 14),
+    ]
+
+
+def test_clean_fixture_is_silent():
+    assert run_file_rules("clean.py") == []
+
+
+def test_suppression_mechanics():
+    got = run_file_rules("suppressed.py")
+    # line 4's mutable-default is validly suppressed — absent from output
+    assert ("mutable-default", 4) not in got
+    assert got == [
+        ("mutable-default", 12),  # missing-reason suppression doesn't count
+        ("suppression", 9),       # unused suppression
+        ("suppression", 12),      # missing '-- reason'
+        ("suppression", 17),      # unknown rule id
+    ]
+
+
+def test_concurrency_fixture_exact_lines():
+    sf = SourceFile(FIXTURES / "concurrency_bad.py")
+    got = sorted((v.rule, v.line) for v in analyze_concurrency([sf]))
+    assert got == [
+        ("lock-order", 34),            # a->b here, b->a at line 39
+        ("thread-shared-state", 18),   # _write runs on the pool thread
+        ("thread-shared-state", 19),
+        ("thread-shared-state", 22),   # snapshot races the pool thread
+    ]
+
+
+def test_cli_exit_codes(capsys):
+    # violations -> nonzero, rule id + file:line on stdout
+    rc = analysis.main([
+        "--no-trace", "--no-project",
+        str(FIXTURES / "mutable_default.py")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "[mutable-default]" in out
+    assert "mutable_default.py:4" in out
+    # clean file -> zero
+    rc = analysis.main([
+        "--no-trace", "--no-project", str(FIXTURES / "clean.py")])
+    assert rc == 0
+
+
+def test_real_tree_is_analysis_clean():
+    """src/repro passes every file + project rule (the CI gate, minus the
+    trace layer, which compiles and is exercised by the analysis CI job)."""
+    violations, _ = analysis.collect_violations(REPO, include_trace=False)
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_backend_contract_flags_missing_equivalence_entry(tmp_path):
+    """A policy registered in the live engine but absent from a
+    literal-name equivalence suite is flagged (one violation per
+    uncovered policy); a registry-derived suite covers by construction."""
+    from repro.analysis.contracts import check_backend_contract
+    from repro.core import engine
+
+    fake = tmp_path / "tests" / "test_policies_equivalence.py"
+    fake.parent.mkdir(parents=True)
+    fake.write_text('def test_one():\n    run("omfs")\n')
+    got = [v for v in check_backend_contract(tmp_path)
+           if "never exercised" in v.message]
+    uncovered = sorted(engine.POLICIES)
+    assert len(got) == len(uncovered) - 1          # every policy but "omfs"
+    assert all(v.rule == "backend-contract" for v in got)
+
+    fake.write_text("from repro.core import engine\n"
+                    "NAMES = sorted(engine.POLICIES)\n")
+    assert [v for v in check_backend_contract(tmp_path)
+            if "never exercised" in v.message] == []
+
+
+def test_known_failures_registry_valid_and_loadable():
+    assert known_failures.check_known_failures(REPO) == []
+    known = known_failures.load_known_failures(REPO)
+    assert len(known) >= 1
+    for nodeid, reason in known.items():
+        assert "::" in nodeid and reason.strip()
+
+
+def test_github_summary_format():
+    from repro.analysis import _github_summary
+    from repro.analysis.base import Violation
+
+    md = _github_summary([Violation("cost-grid", "a.py", 3, "x | y")])
+    assert "| `cost-grid` | `a.py:3` |" in md
+    assert "x \\| y" in md
+    assert "No violations" in _github_summary([])

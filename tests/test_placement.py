@@ -29,7 +29,7 @@ def test_alloc_release_invariants(ops):
             live.pop(jid)
         # invariants
         spans = sorted(live.values())
-        for (o1, s1), (o2, s2) in zip(spans, spans[1:]):
+        for (o1, s1), (o2, _s2) in zip(spans, spans[1:]):
             assert o1 + s1 <= o2, "overlapping allocations"
         assert alloc.free_chips() == total - sum(s for _, s in live.values())
     # release everything -> coalesces back to one block
