@@ -119,6 +119,48 @@ def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
          f"(placement scan confined to the eviction branch)")
 
 
+def donation_case(n_jobs: int, cpu_total: int, horizon: int) -> None:
+    """Peak-memory gate for the donated table buffers (ISSUE 7 satellite).
+
+    The jitted runners declare ``donate_argnums=(0,)``: XLA reuses the
+    input table's buffers for the output, so a sweep's working set is ONE
+    table, not input+output.  Two asserts make that a regression gate
+    rather than a hope: the donated input must actually be deleted, and
+    the total live-array footprint after the run must not have grown by a
+    second table copy (slack: the busy series plus one column)."""
+    import resource
+
+    from repro.core import engine
+
+    users, jobs = _workload(n_jobs, cpu_total)
+    cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
+    run = engine._jitted_runner(cfg, omfs_jax.make_omfs_pass(64), horizon)
+    tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)
+    table_bytes = sum(getattr(tbl, f).nbytes for f in tbl._fields)
+
+    donated = engine._copy_table(tbl)      # keep `tbl` alive as the yardstick
+    jax.block_until_ready(donated.cpus)
+    before = sum(a.nbytes for a in jax.live_arrays())
+    out, busy = run(donated, ent)
+    jax.block_until_ready(busy)
+    after = sum(a.nbytes for a in jax.live_arrays())
+
+    assert donated.cpus.is_deleted(), \
+        "input table was NOT donated — the runner holds two table copies"
+    grew = after - before
+    slack = busy.nbytes + tbl.cpus.nbytes
+    assert grew <= slack, (
+        f"live arrays grew {grew}B > {slack}B slack for a {table_bytes}B "
+        "table — donation regressed (output no longer reuses the input "
+        "buffers)")
+    rss_mib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss // 1024
+    emit(f"sched_scale/donation_extra_copies_{n_jobs}jobs",
+         grew / table_bytes,
+         f"x table ({table_bytes}B); input deleted=True; "
+         f"rss={rss_mib}MiB (informational)")
+    del out, busy
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -140,6 +182,7 @@ def main() -> None:
 
     for n_jobs, cpu_total, pass_depth, horizon in cases:
         run_case(n_jobs, cpu_total, pass_depth, horizon)
+    donation_case(*((64, 128, 50) if args.smoke else (2000, 4096, 50)))
     write_rows("sched_scale")
 
 

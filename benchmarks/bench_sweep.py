@@ -1,0 +1,152 @@
+"""Policy-sweep throughput: ONE vmapped compiled program vs the sequential
+per-cell loop (`engine.simulate_batch` vs `engine.simulate` — ISSUE 7 /
+ROADMAP "vmap/shard_map a batch of scenario×policy×seed combos").
+
+The grid is the hillclimb.py-style auto-tuning workload: quantum ×
+pass_depth × victim-key policy × seed.  Sequentially, every (quantum,
+pass_depth, policy) point is a SEPARATE XLA program (those knobs are baked
+into the trace as Python constants) — the full 256-cell sweep pays 128
+compiles plus 256 dispatches.  `simulate_batch` threads the knobs as
+traced int32 scalars on the batch axis, so the whole grid is one compile +
+one dispatch, with the compiled queue loop statically truncated at the
+batch-wide max pass_depth (masked iterations past each cell's own depth
+are no-ops, so results are unchanged).
+
+Timing is reported both ways:
+
+* ``speedup_cold`` — first-touch sweep including each side's compiles (the
+  one-shot auto-tuning story; this is where the >=10x acceptance bar
+  lives, asserted in ``--full`` runs),
+* ``speedup_warm`` + ``*_cells_per_s`` — steady-state re-sweeps (what the
+  CI regression gate tracks; compile noise excluded).
+
+Per-cell results are asserted bit-identical between the two paths on every
+run (tables + busy series), so the speedup is at equal results by
+construction.
+
+``--smoke`` shrinks the grid for CI; the gated rows keep the same names.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, write_rows
+from repro.core import engine, omfs_jax
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+CPU_TOTAL = 32
+
+
+def _workload(seed: int, n_jobs: int, horizon: int):
+    spec = WorkloadSpec(n_users=4, horizon=horizon, cpu_total=CPU_TOTAL,
+                        seed=seed, arrival_rate=0.15, mean_work=20,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:n_jobs]
+    return users, jobs
+
+
+def _grid(smoke: bool):
+    if smoke:
+        quanta, depths, seeds = (2, 8), (2, 4), range(2)
+        n_jobs, horizon = 24, 60
+    else:
+        quanta, depths = (1, 2, 3, 4, 5, 6, 8, 12), (1, 2, 3, 4, 5, 6, 7, 8)
+        seeds = range(2)
+        n_jobs, horizon = 32, 100
+    policies = ("omfs", "omfs_cheap_victim")
+    workloads = {s: _workload(s, n_jobs, horizon) for s in seeds}
+    cells = [
+        (q, d, p, s)
+        for q in quanta for d in depths for p in policies for s in seeds
+    ]
+    return cells, workloads, horizon
+
+
+def _run_sequential(cells, workloads, horizon):
+    out = []
+    for q, d, p, s in cells:
+        users, jobs = workloads[s]
+        cfg = SchedulerConfig(cpu_total=CPU_TOTAL, quantum=q)
+        out.append(engine.simulate(users, jobs, cfg, horizon, policy=p,
+                                   backend="jax", pass_depth=d))
+    jax.block_until_ready(out[-1].table)
+    return out
+
+
+def _run_batch(batch_cells, cfg, horizon):
+    out = engine.simulate_batch(batch_cells, cfg, horizon)
+    jax.block_until_ready(out[-1].table)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid for CI (same gated row names)")
+    ap.add_argument("--full", action="store_true",
+                    help="assert the >=10x cold-sweep acceptance bar")
+    args = ap.parse_args()
+
+    cells, workloads, horizon = _grid(args.smoke and not args.full)
+    n = len(cells)
+    cfg = SchedulerConfig(cpu_total=CPU_TOTAL, quantum=1)  # knobs override
+    batch_cells = [
+        engine.BatchCell(users=workloads[s][0], jobs=workloads[s][1],
+                         policy=p, quantum=q, pass_depth=d)
+        for q, d, p, s in cells
+    ]
+
+    # --- cold: first touch pays each side's compiles (the sweep story) ----
+    t0 = time.perf_counter()
+    seq = _run_sequential(cells, workloads, horizon)
+    t_seq_cold = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    batch = _run_batch(batch_cells, cfg, horizon)
+    t_batch_cold = time.perf_counter() - t0
+
+    # --- equal results: every cell, tables + busy, bit for bit ------------
+    for (q, d, p, s), sres, bres in zip(cells, seq, batch):
+        assert omfs_jax.tables_equal(sres.table, bres.table), \
+            f"sweep cell diverged: quantum={q} depth={d} policy={p} seed={s}"
+        assert np.array_equal(sres.busy_series(), bres.busy_series()), \
+            f"busy series diverged: quantum={q} depth={d} policy={p} seed={s}"
+
+    # --- warm: steady-state re-sweeps (stable rows for the CI gate) -------
+    t_seq_warm = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _run_sequential(cells, workloads, horizon)
+        t_seq_warm = min(t_seq_warm, time.perf_counter() - t0)
+    t_batch_warm = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _run_batch(batch_cells, cfg, horizon)
+        t_batch_warm = min(t_batch_warm, time.perf_counter() - t0)
+
+    grid = f"cells={n};horizon={horizon};grid=quantum*depth*policy*seed"
+    emit("sweep/batch_cells_per_s", n / t_batch_warm, grid)
+    emit("sweep/seq_cells_per_s", n / t_seq_warm, grid)
+    emit("sweep/speedup_warm", t_seq_warm / t_batch_warm,
+         "x, steady-state (per-cell results bit-identical)")
+    emit("sweep/speedup_cold", t_seq_cold / t_batch_cold,
+         f"x, incl. compiles: seq pays one XLA program per "
+         f"(quantum,depth,policy) point, batch compiles once")
+
+    if args.full:
+        assert n >= 256, f"full grid must be >=256 cells, got {n}"
+        assert t_seq_cold / t_batch_cold >= 10.0, (
+            f"cold sweep speedup {t_seq_cold / t_batch_cold:.1f}x below the "
+            "10x acceptance bar")
+
+    write_rows("sweep")
+
+
+if __name__ == "__main__":
+    main()

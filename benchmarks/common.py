@@ -14,9 +14,15 @@ def emit(name: str, value: float, derived: str = "") -> None:
     print(f"{name},{value:.6g},{derived}")
 
 
-def write_rows(bench: str, outdir: str = ".") -> str:
+def write_rows(bench: str, outdir: str = "") -> str:
     """Dump every emitted row to ``BENCH_<bench>.json`` — CI uploads these
-    as artifacts so the perf trajectory is tracked per-PR."""
+    as artifacts so the perf trajectory is tracked per-PR.
+
+    ``outdir`` defaults to ``$BENCH_OUTDIR`` (else the CWD) so CI can run
+    the same bench command N times into bench-run1/2/3 directories and
+    gate on the per-row median (`compare_bench --median`)."""
+    outdir = outdir or os.environ.get("BENCH_OUTDIR", ".")
+    os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, f"BENCH_{bench}.json")
     with open(path, "w") as f:
         json.dump([{"name": n, "value": v, "derived": d}

@@ -211,8 +211,10 @@ def check_retrace(root: Path) -> List[Violation]:
             "destroys tick throughput)"))
 
     # -- update_state_mib must not invalidate the compiled scan -------------
+    # (the runner donates its input; copy so the cached fixture table's
+    # buffers — aliased by the untouched columns — survive)
     tbl2 = omfs_jax.update_state_mib(tbl, 0, 777, cfg)
-    runner(tbl2, ent)
+    runner(engine._copy_table(tbl2), ent)
     n = cache_size(runner)
     if n is not None and n != 1:
         out.append(Violation(
@@ -232,4 +234,40 @@ def check_retrace(root: Path) -> List[Violation]:
             "retrace", engine_path, 1,
             f"repeat simulate_matrix compiled {n} times — the policy "
             "matrix must share ONE compiled lax.switch scan"))
+
+    # -- repeat simulate_batch: one compile for the whole sweep grid --------
+    cells = [engine.BatchCell(users=users, jobs=jobs, policy="omfs",
+                              quantum=q, pass_depth=d)
+             for q in (1, 3) for d in (4, None)]
+    engine.simulate_batch(cells, cfg, horizon)
+    engine.simulate_batch(list(reversed(cells)), cfg, horizon)
+    brunner = engine._jitted_batch_runner(
+        cfg, (engine.POLICIES["omfs"].jax_factory(None),), horizon, 1)
+    n = cache_size(brunner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"repeat simulate_batch compiled {n} times — the knobs "
+            "(quantum/pass_depth) must ride the batch axis as traced "
+            "scalars, ONE program for the whole grid"))
+
+    # -- streaming: N segments, one compile (t0 is traced) ------------------
+    from repro.core.workload import arrival_stream
+    engine.simulate_stream(users, arrival_stream(jobs), cfg, horizon,
+                           capacity=16, segment_len=5)
+    srunner = engine._jitted_segment_runner(cfg, pass_fn, 5)
+    n = cache_size(srunner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"streaming segment runner compiled {n} times across segments "
+            "— the segment start tick must stay traced (one program for "
+            "the whole stream)"))
+    ins = cache_size(omfs_jax.insert_rows)
+    if ins is not None and ins > 1:
+        out.append(Violation(
+            "retrace", str(root / OMFS_JAX), 1,
+            f"segment-boundary insert_rows compiled {ins} times — the "
+            "compaction scatter must be one fixed-shape program per "
+            "capacity"))
     return out

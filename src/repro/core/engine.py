@@ -137,7 +137,9 @@ def tick_python(
 
 
 def tick_jax(cfg: SchedulerConfig, ent: jax.Array, tbl: "omfs_jax.JobTable",
-             t: jax.Array, policy_pass: JaxPass) -> "omfs_jax.JobTable":
+             t: jax.Array, policy_pass: JaxPass,
+             knobs: Optional["omfs_jax.Knobs"] = None
+             ) -> "omfs_jax.JobTable":
     # 1. arrivals
     arrived = (tbl.state == omfs_jax.UNSUB) & (tbl.submit <= t)
     tbl = tbl._replace(state=jnp.where(arrived, omfs_jax.PENDING, tbl.state))
@@ -150,16 +152,23 @@ def tick_jax(cfg: SchedulerConfig, ent: jax.Array, tbl: "omfs_jax.JobTable",
         state=jnp.where(done, omfs_jax.DONE, tbl.state),
         finish=jnp.where(done, t, tbl.finish),
     )
-    # 3. scheduling pass over the submitted queue snapshot
-    return policy_pass(cfg, ent, t, tbl)
+    # 3. scheduling pass over the submitted queue snapshot; ``knobs`` (the
+    # batched sweep's traced quantum/depth overrides) is only forwarded when
+    # set, so 4-arg custom passes keep working and the sequential trace is
+    # byte-identical to the pre-batching program
+    if knobs is None:
+        return policy_pass(cfg, ent, t, tbl)
+    return policy_pass(cfg, ent, t, tbl, knobs)
 
 
 def _tick_step(cfg: SchedulerConfig, ent: jax.Array,
-               tbl: "omfs_jax.JobTable", t: jax.Array, pass_fn: JaxPass):
-    """One scan step shared by BOTH jitted runners (per-policy and matrix):
-    the tick plus the per-tick busy reduction (protocol step 4) — defined
-    once so `simulate` and `simulate_matrix` cannot drift apart."""
-    tbl = tick_jax(cfg, ent, tbl, t, pass_fn)
+               tbl: "omfs_jax.JobTable", t: jax.Array, pass_fn: JaxPass,
+               knobs: Optional["omfs_jax.Knobs"] = None):
+    """One scan step shared by ALL jitted runners (per-policy, matrix, and
+    batched): the tick plus the per-tick busy reduction (protocol step 4) —
+    defined once so `simulate`, `simulate_matrix`, and `simulate_batch`
+    cannot drift apart."""
+    tbl = tick_jax(cfg, ent, tbl, t, pass_fn, knobs)
     busy = jnp.sum(jnp.where(tbl.state == omfs_jax.RUNNING, tbl.cpus, 0))
     return tbl, busy
 
@@ -168,9 +177,13 @@ def _tick_step(cfg: SchedulerConfig, ent: jax.Array,
 def _jitted_runner(cfg: SchedulerConfig, pass_fn: JaxPass, horizon: int):
     """One jitted scan per (cfg, pass, horizon): repeated `simulate` calls
     reuse the compilation (pass factories are memoized for the same reason —
-    a fresh closure per call would defeat every warmup)."""
+    a fresh closure per call would defeat every warmup).
 
-    @jax.jit
+    The input table is DONATED: XLA reuses its buffers for the output, so a
+    large-J sweep holds one table copy, not two.  Callers hand over a table
+    they built for the call (`run_jax`) or an explicit copy."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def run(tbl, ent):
         def step(tbl, t):
             return _tick_step(cfg, ent, tbl, t, pass_fn)
@@ -243,6 +256,7 @@ class EngineResult:
     sim: Optional[SimResult] = None                    # python backend
     table: Optional["omfs_jax.JobTable"] = None        # jax backend
     busy: Optional[np.ndarray] = None                  # busy[t], both backends
+    stream_stats: Optional[Dict[str, int]] = None      # simulate_stream only
 
     def busy_series(self) -> np.ndarray:
         return np.asarray(self.busy)
@@ -393,9 +407,12 @@ def _jitted_matrix_runner(cfg: SchedulerConfig, pass_fns: tuple, horizon: int):
     index is measurably cheaper than compiling one scan per policy (the
     tick protocol, table plumbing, and XLA fixed costs are shared) — this
     is what keeps `bench_scheduler --smoke`'s policy matrix off the CI
-    critical path."""
+    critical path.
 
-    @jax.jit
+    The input table is DONATED (see `_jitted_runner`); `simulate_matrix`
+    passes each policy a fresh copy of the stacked table."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def run(tbl, ent, pidx):
         def step(tbl, t):
             branches = [
@@ -436,7 +453,313 @@ def simulate_matrix(
     run = _jitted_matrix_runner(config, pass_fns, horizon)
     out = []
     for k, name in enumerate(names):
-        final, busy = run(tbl, ent, k)
+        # the runner donates its input table; each policy gets its own copy
+        final, busy = run(_copy_table(tbl), ent, k)
         out.append(EngineResult(policy=name, backend="jax", config=config,
                                 table=final, busy=np.asarray(busy)))
     return out
+
+
+def _copy_table(tbl: "omfs_jax.JobTable") -> "omfs_jax.JobTable":
+    """Fresh buffers for every column — what callers hand to the donating
+    jitted runners when they need to keep (or reuse) the original."""
+    return jax.tree_util.tree_map(lambda a: a.copy(), tbl)
+
+
+# ---------------------------------------------------------------------------
+# Batched sweep engine: ONE compiled program for a scenario×policy×seed grid
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchCell:
+    """One cell of a `simulate_batch` sweep: a workload (scenario × seed),
+    a registered policy, and optional traced knob overrides.
+
+    ``quantum``/``pass_depth`` override ``cfg.quantum`` / the full-queue
+    sweep *without* recompiling: they ride the batch axis as int32 scalars
+    (`omfs_jax.Knobs`), so a quantum×pass_depth×policy grid is one XLA
+    program (see DESIGN.md §Batched execution)."""
+
+    users: List[User]
+    jobs: List[Job]
+    policy: str = "omfs"
+    quantum: Optional[int] = None
+    pass_depth: Optional[int] = None
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_batch_runner(cfg: SchedulerConfig, pass_fns: tuple, horizon: int,
+                         n_dev: int = 1):
+    """`jax.vmap` of the matrix runner's tick scan over a leading batch
+    axis: one compiled program sweeps every (table, ent, pidx, knobs) cell.
+
+    With ``n_dev > 1`` the vmapped program runs under `shard_map`, the
+    batch axis split evenly across devices (cells are independent — no
+    collectives, no replication checks needed).  The batched table is
+    donated like the sequential runners' tables."""
+
+    def cell(tbl, ent, pidx, knobs):
+        def step(tbl, t):
+            branches = [
+                lambda tb, p=p: _tick_step(cfg, ent, tb, t, p, knobs)
+                for p in pass_fns
+            ]
+            return jax.lax.switch(pidx, branches, tbl)
+
+        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
+
+    vcell = jax.vmap(cell)
+    if n_dev > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec
+
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("b",))
+        spec = PartitionSpec("b")
+        vcell = shard_map(vcell, mesh=mesh,
+                          in_specs=(spec, spec, spec, spec),
+                          out_specs=(spec, spec), check_rep=False)
+    return jax.jit(vcell, donate_argnums=(0,))
+
+
+def simulate_batch(
+    cells: List[BatchCell],
+    config: SchedulerConfig,
+    horizon: int,
+    *,
+    devices: Optional[int] = None,
+) -> List[EngineResult]:
+    """Run ``B`` independent simulations as ONE compiled batched scan.
+
+    Stacks every cell's `JobTable` / entitlement vector onto a leading
+    batch axis (`omfs_jax.stack_tables` — short tables get inert pad rows),
+    selects each cell's policy by `lax.switch` index and its quantum /
+    pass-depth by traced `Knobs`, and `jax.vmap`s the shared tick scan.
+    Per-cell results are bit-identical to sequential
+    ``simulate(..., backend="jax")`` with the matching config
+    (tests/test_simulate_batch.py asserts this for every registered
+    policy).
+
+    ``devices`` caps how many local devices the batch axis is sharded
+    across (default: all of them; 1 on the CPU host).  With more than one
+    device the batch is padded to a multiple of the device count with
+    replicas of the last cell (dropped from the results).
+
+    Empty corners match the sequential paths exactly: ``cells == []``
+    returns ``[]``, and a batch whose tables are ALL empty skips the jitted
+    path just like `simulate_matrix`'s early return (a mixed batch keeps
+    empty cells on the jitted path via all-pad tables — same result either
+    way, which is the regression test's point).
+    """
+    cells = list(cells)
+    if not cells:
+        return []
+    names = sorted({c.policy for c in cells})
+    unknown = [n for n in names if n not in POLICIES]
+    if unknown:
+        raise ValueError(f"unknown policies {unknown}; known: {sorted(POLICIES)}")
+    # Per-cell depth rides the knobs (traced masking), but the fori_loop
+    # trip count is static: when EVERY cell caps pass_depth, truncate the
+    # compiled loop at the batch-wide max.  Iterations past a cell's own
+    # depth are masked no-ops either way, so results are unchanged — the
+    # truncation only drops dead work (a depth-4 cell in a J=40 table
+    # otherwise pays all 40 positions under vmap).
+    depths = [c.pass_depth for c in cells]
+    bound = None if any(d is None for d in depths) else max(depths)
+    pass_fns = tuple(POLICIES[n].jax_factory(bound) for n in names)
+    built = [omfs_jax.table_from_jobs(c.jobs, c.users, config.cpu_total,
+                                      config) for c in cells]
+    sizes = [t.cpus.shape[0] for t, _ in built]
+    if max(sizes) == 0:
+        # all-empty batch: same early return simulate/simulate_matrix take
+        return [EngineResult(policy=c.policy, backend="jax", config=config,
+                             table=t, busy=np.zeros((horizon,), np.int32))
+                for c, (t, _) in zip(cells, built)]
+
+    tbl, ent = omfs_jax.stack_tables([t for t, _ in built],
+                                     [e for _, e in built])
+    pidx = jnp.asarray([names.index(c.policy) for c in cells], jnp.int32)
+    knobs = omfs_jax.Knobs(
+        quantum=jnp.asarray(
+            [config.quantum if c.quantum is None else c.quantum
+             for c in cells], jnp.int32),
+        depth=jnp.asarray(
+            [int(omfs_jax.BIG) if c.pass_depth is None else c.pass_depth
+             for c in cells], jnp.int32),
+    )
+
+    n_dev = len(jax.devices()) if devices is None else int(devices)
+    n_dev = max(1, min(n_dev, len(cells)))
+    pad = (-len(cells)) % n_dev
+    if pad:
+        rep = lambda a: jnp.concatenate(
+            [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+        tbl = jax.tree_util.tree_map(rep, tbl)
+        ent, pidx = rep(ent), rep(pidx)
+        knobs = jax.tree_util.tree_map(rep, knobs)
+
+    run = _jitted_batch_runner(config, pass_fns, horizon, n_dev)
+    final, busy = run(tbl, ent, pidx, knobs)
+    busy = np.asarray(busy)
+    out = []
+    for i, (c, J) in enumerate(zip(cells, sizes)):
+        # slice the cell back out of the batch axis and drop its pad rows
+        # (rows never permute in the table, so [:J] is exactly the cell)
+        cell_tbl = jax.tree_util.tree_map(lambda a: a[i, :J], final)
+        out.append(EngineResult(policy=c.policy, backend="jax",
+                                config=config, table=cell_tbl,
+                                busy=busy[i]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chunked-epoch streaming engine: unbounded arrivals at bounded memory
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_segment_runner(cfg: SchedulerConfig, pass_fn: JaxPass,
+                           seg_len: int):
+    """One jitted fixed-length segment of the tick scan, with the segment's
+    start tick ``t0`` TRACED (an int32 scalar, not a Python constant): every
+    segment of a stream reuses the one compilation — `_cache_size() == 1`
+    after N segments is asserted by the jaxpr/retrace audit.  Donates the
+    table like the other runners (between segments exactly one [capacity]-
+    shaped table is alive)."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run(tbl, ent, t0):
+        def step(tbl, i):
+            return _tick_step(cfg, ent, tbl, t0 + i, pass_fn)
+
+        return jax.lax.scan(step, tbl, jnp.arange(seg_len, dtype=jnp.int32))
+
+    return run
+
+
+def simulate_stream(
+    users: List[User],
+    jobs,
+    config: SchedulerConfig,
+    horizon: int,
+    policy: str = "omfs",
+    *,
+    capacity: int,
+    segment_len: int,
+    pass_depth: Optional[int] = None,
+) -> EngineResult:
+    """Run an arrival *stream* through a fixed-``capacity`` JobTable in
+    jitted ``segment_len``-tick chunks — unbounded workloads at bounded
+    memory (ROADMAP "million-job streaming simulation").
+
+    ``jobs`` is any iterable of `core.types.Job` in ascending
+    ``(submit_time, id)`` order (`core.workload.arrival_stream` sorts a
+    list; `core.workload.endless_arrivals` generates forever).  The loop:
+
+      1. host boundary: pull every job due before the segment's end from
+         the iterator, fetch the table, compact finished (DONE/KILLED)
+         rows out into a host-side archive, and scatter the arrivals into
+         the freed slots (`omfs_jax.insert_rows` — one jitted program for
+         the whole stream).  Arrivals land as UNSUBMITTED rows and fire at
+         their true submit tick inside the scan, so inserting a segment
+         early is semantics-free.
+      2. run the jitted segment (`_jitted_segment_runner` — traced start
+         tick, one compile across segments).
+
+    When every due arrival always finds a slot (live jobs never exceed
+    ``capacity``), the merged result is bit-identical to the monolithic
+    ``simulate(..., backend="jax")`` run over the same jobs: row identity
+    (queue/victim tie-breaks) rides the table's ``jid`` column, not row
+    position.  When slots run out, surplus arrivals are DEFERRED to a
+    later boundary (they arrive late, like a submit-rate-limited
+    front-end); ``stream_stats["deferrals"]`` counts those events.
+
+    Jobs whose ``submit_time >= horizon`` are left in the iterator and do
+    not appear in the result table (the monolithic run keeps them as
+    UNSUBMITTED rows — every metric still matches).
+    """
+    if capacity <= 0:
+        raise ValueError(f"capacity must be positive, got {capacity}")
+    if segment_len <= 0:
+        raise ValueError(f"segment_len must be positive, got {segment_len}")
+    if not isinstance(policy, str) or policy not in POLICIES:
+        raise ValueError(
+            f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    pass_fn = POLICIES[policy].jax_factory(pass_depth)
+
+    ent = omfs_jax.entitlements(users, config.cpu_total)
+    empty, _ = omfs_jax.table_from_jobs([], users, config.cpu_total, config)
+    tbl = omfs_jax.pad_table(empty, capacity)
+
+    feed = iter(jobs)
+    lookahead: Optional[Job] = None
+    due: List[Job] = []
+    archived: List["omfs_jax.JobTable"] = []   # host-side finished rows
+    busy_parts: List[np.ndarray] = []
+    stats = {"segments": 0, "inserted": 0, "deferrals": 0, "peak_live": 0,
+             "capacity": capacity}
+
+    def boundary(tbl):
+        """Compact finished rows out, insert due arrivals; host-side."""
+        host = jax.device_get(tbl)
+        pad = np.asarray(omfs_jax.is_pad(host))
+        finished = np.isin(np.asarray(host.state),
+                           (int(omfs_jax.DONE), int(omfs_jax.KILLED))) & ~pad
+        if finished.any():
+            idx = np.flatnonzero(finished)
+            archived.append(jax.tree_util.tree_map(lambda a: a[idx], host))
+        free = np.flatnonzero(finished | pad)
+        stats["peak_live"] = max(stats["peak_live"], capacity - free.size)
+        k = min(len(due), free.size)
+        if k < len(due):
+            stats["deferrals"] += len(due) - k
+        if k == 0 and not finished.any():
+            return tbl
+        take, due[:] = due[:k], due[k:]
+        block, _ = omfs_jax.table_from_jobs(take, users, config.cpu_total,
+                                            config)
+        rows = omfs_jax.pad_table(block, capacity)
+        # arrivals fill the first k free slots; pad rows clear the rest of
+        # the freed slots; occupied slots get a masked write-back.  `slots`
+        # is a permutation of arange(capacity) by construction.
+        slots = np.concatenate(
+            [free, np.setdiff1d(np.arange(capacity), free)])
+        valid = np.arange(capacity) < free.size
+        stats["inserted"] += k
+        return omfs_jax.insert_rows(tbl, jnp.asarray(slots, jnp.int32),
+                                    rows, jnp.asarray(valid))
+
+    t0 = 0
+    while t0 < horizon:
+        seg = min(segment_len, horizon - t0)
+        while True:
+            if lookahead is None:
+                lookahead = next(feed, None)
+            if lookahead is None or lookahead.submit_time >= t0 + seg:
+                break
+            due.append(lookahead)
+            lookahead = None
+        tbl = boundary(tbl)
+        runner = _jitted_segment_runner(config, pass_fn, seg)
+        tbl, busy = runner(tbl, ent, jnp.int32(t0))
+        busy_parts.append(np.asarray(busy))
+        stats["segments"] += 1
+        t0 += seg
+
+    # final extraction: archive + still-live rows, merged in job-id order
+    # (= the monolithic table's row order).  Arrivals still deferred here
+    # never entered the table; they stay out of the result (counted below).
+    stats["dropped"] = len(due)
+    host = jax.device_get(tbl)
+    live = np.flatnonzero(~np.asarray(omfs_jax.is_pad(host)))
+    parts = archived + [jax.tree_util.tree_map(lambda a: a[live], host)]
+    merged_np = {
+        f: np.concatenate([np.asarray(getattr(p, f)) for p in parts])
+        for f in omfs_jax.JobTable._fields}
+    order = np.argsort(merged_np["jid"], kind="stable")
+    merged = omfs_jax.JobTable(**{
+        f: jnp.asarray(v[order], jnp.int32) for f, v in merged_np.items()})
+    busy = (np.concatenate(busy_parts) if busy_parts
+            else np.zeros((0,), np.int32))
+    return EngineResult(policy=policy, backend="jax", config=config,
+                        table=merged, busy=busy, stream_stats=stats)

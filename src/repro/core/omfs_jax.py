@@ -66,6 +66,12 @@ CKPT = int(JobClass.CHECKPOINTABLE)
 class JobTable(NamedTuple):
     """Static job attributes + mutable runtime state, all [J]-shaped."""
 
+    jid: jax.Array         # int32 job id — the tie-break identity.  For a
+    #   monolithic table rows are sorted by id, so this is order-isomorphic
+    #   to the row index (schedules unchanged); for the streaming engine a
+    #   recycled slot keeps the job's true id, so queue/victim tie-breaking
+    #   stays bit-identical to the monolithic run (DESIGN.md §Batched
+    #   execution).  Pad rows carry BIG.
     user: jax.Array        # int32 user index
     cpus: jax.Array        # int32
     work: jax.Array        # int32 work units
@@ -123,6 +129,7 @@ def table_from_jobs(jobs, users, cpu_total: int,
     spill = 1 if tiered else 0
     arr = lambda f, d=jnp.int32: jnp.asarray([f(x) for x in j], d)
     table = JobTable(
+        jid=arr(lambda x: x.id),
         user=arr(lambda x: uidx[x.user]),
         cpus=arr(lambda x: x.cpus),
         work=arr(lambda x: x.work),
@@ -154,6 +161,34 @@ def entitlements(users, cpu_total: int) -> jnp.ndarray:
     return jnp.asarray([u.entitled_cpus(cpu_total) for u in users], jnp.int32)
 
 
+class Knobs(NamedTuple):
+    """Per-cell *traced* scheduling knobs for the batched sweep engine.
+
+    A sequential `simulate` bakes ``cfg.quantum`` and ``pass_depth`` into
+    the trace as Python constants — sweeping them means one XLA program
+    per grid point.  `engine.simulate_batch` instead threads them through
+    the pass as int32 scalars (one per batch cell under ``vmap``), so ONE
+    compiled program covers the whole quantum×pass_depth grid.  Passes
+    read them only when ``knobs is not None``; the default path traces
+    exactly as before (bit-identity with the per-cell programs is asserted
+    by tests/test_simulate_batch.py).
+
+    ``depth`` bounds the per-tick queue sweep by *masking* loop iterations
+    past it (the fori_loop still runs the full static trip count), which is
+    result-identical to truncating the loop: a masked iteration admits
+    nothing and the eviction branch is never taken.
+    """
+
+    quantum: jax.Array     # int32 — minimal uninterrupted run before evictable
+    depth: jax.Array       # int32 — queue positions processed per tick
+
+
+def default_knobs(cfg: SchedulerConfig,
+                  pass_depth: Optional[int] = None) -> Knobs:
+    return Knobs(quantum=jnp.int32(cfg.quantum),
+                 depth=jnp.int32(BIG if pass_depth is None else pass_depth))
+
+
 # ---------------------------------------------------------------------------
 # JobTable primitives shared by every vectorized policy (OMFS + baselines)
 # ---------------------------------------------------------------------------
@@ -163,11 +198,12 @@ def queue_order(tbl: JobTable) -> Tuple[jax.Array, jax.Array]:
     """Snapshot the submitted queue: (order[J], eligible[J]).
 
     Order is (-priority, submit, id) — the same key as queues.submitted_key —
-    with ineligible rows pushed to the end."""
-    n = tbl.cpus.shape[0]
+    with ineligible rows pushed to the end.  The id tie-break is the ``jid``
+    column (== row order for monolithic tables; the true job id for
+    streaming tables whose slots are recycled)."""
     eligible = tbl.state == PENDING
     qkey = jnp.where(eligible, -tbl.priority, BIG)
-    order = jnp.lexsort((jnp.arange(n), tbl.submit, qkey))
+    order = jnp.lexsort((tbl.jid, tbl.submit, qkey))
     return order, eligible
 
 
@@ -216,11 +252,10 @@ def victim_order(tbl: JobTable, cheap: bool = False) -> jax.Array:
     queues.running_victim_key.  ``cheap`` (the `omfs_cheap_victim` policy):
     ``(save_cost, priority, run_start, id)`` — cheapest-to-checkpoint
     first, priced at the fast tier (queues.cheap_victim_key)."""
-    n = tbl.cpus.shape[0]
     if cheap:
         return jnp.lexsort(
-            (jnp.arange(n), tbl.run_start, tbl.priority, tbl.cost_save))
-    return jnp.lexsort((jnp.arange(n), tbl.run_start, tbl.priority))
+            (tbl.jid, tbl.run_start, tbl.priority, tbl.cost_save))
+    return jnp.lexsort((tbl.jid, tbl.run_start, tbl.priority))
 
 
 def select_victims(tbl: JobTable, evictable: jax.Array, idle: jax.Array,
@@ -328,10 +363,12 @@ def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
 
 def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
                tbl: JobTable, idx: jax.Array, eligible: jax.Array,
-               cheap_victims: bool = False) -> JobTable:
+               cheap_victims: bool = False,
+               knobs: Optional[Knobs] = None) -> JobTable:
     """Process job ``idx`` (runner, lines 18-38); no-op unless eligible and
     still pending.  Kept as the un-optimized reference the incremental pass
     is benchmarked and property-tested against."""
+    quantum = cfg.quantum if knobs is None else knobs.quantum
     running = tbl.state == RUNNING
     preempt_able = tbl.jclass != NONP
 
@@ -353,7 +390,7 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
     reject_28 = jc > entitled - total_usage
 
     # lines 31-36: victim selection among quantum-expired running jobs
-    evictable = running & preempt_able & ((t - tbl.run_start) >= cfg.quantum)
+    evictable = running & preempt_able & ((t - tbl.run_start) >= quantum)
     if cfg.avoid_self_eviction:                # beyond-paper flag
         evictable = evictable & ~same_user
     if cfg.victim_filter_over_entitlement:     # beyond-paper flag
@@ -394,19 +431,28 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
 
     ``cheap_victims=True`` is the `omfs_cheap_victim` registry policy:
     victims order by ``(save_cost, priority, run_start, id)``.
+
+    Every pass accepts an optional trailing ``knobs`` argument
+    (`Knobs`): traced per-cell quantum / pass-depth overrides used by
+    `engine.simulate_batch`.  ``knobs=None`` (every sequential caller)
+    traces exactly the pre-batching program.
     """
 
     def pass_fn(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
-                tbl: JobTable) -> JobTable:
+                tbl: JobTable, knobs: Optional[Knobs] = None) -> JobTable:
         n = tbl.cpus.shape[0]
         order, eligible = queue_order(tbl)
         depth = n if pass_depth is None else min(pass_depth, n)
+        quantum = cfg.quantum if knobs is None else knobs.quantum
 
         if not incremental:
             def body_ref(i, tbl):
                 idx = order[i]
-                return _try_admit(cfg, ent, t, tbl, idx, eligible[idx],
-                                  cheap_victims)
+                elig = eligible[idx]
+                if knobs is not None:
+                    elig = elig & (i < knobs.depth)
+                return _try_admit(cfg, ent, t, tbl, idx, elig,
+                                  cheap_victims, knobs)
             return jax.lax.fori_loop(0, depth, body_ref, tbl)
 
         usage0, nonp0, busy0 = running_usage(tbl, ent.shape[0])
@@ -417,6 +463,8 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
             ju = tbl.user[idx]
             jc = tbl.cpus[idx]
             pending_now = eligible[idx] & (tbl.state[idx] == PENDING)
+            if knobs is not None:
+                pending_now = pending_now & (i < knobs.depth)
             job_non_p = tbl.jclass[idx] == NONP
             idle = cfg.cpu_total - busy
             # lines 23 / 26 / 28 from the carried aggregates — O(1)
@@ -432,7 +480,7 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
                 running = tbl.state == RUNNING
                 preempt_able = tbl.jclass != NONP
                 evictable = running & preempt_able & (
-                    (t - tbl.run_start) >= cfg.quantum)
+                    (t - tbl.run_start) >= quantum)
                 if cfg.avoid_self_eviction:            # beyond-paper flag
                     evictable = evictable & (tbl.user != ju)
                 if cfg.victim_filter_over_entitlement:  # beyond-paper flag
@@ -531,6 +579,80 @@ def update_state_mib(tbl: JobTable, idx, state_mib,
         cost_save2=tbl.cost_save2.at[idx].set(as32(s1)),
         cost_restore2=tbl.cost_restore2.at[idx].set(as32(r1)),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batch stacking + streaming-segment compaction (engine.simulate_batch /
+# engine.simulate_stream build on these; DESIGN.md §Batched execution)
+# ---------------------------------------------------------------------------
+
+#: pad-row values per column; unlisted columns pad with 0.  A pad row is
+#: inert by construction: ``submit=BIG`` never arrives (state stays UNSUB,
+#: never PENDING/RUNNING), ``cpus=0`` so even a bug admitting one would
+#: not move any aggregate, and ``jid=BIG`` keeps it last in every
+#: tie-break.
+_PAD_VALUES = {"jid": int(BIG), "submit": int(BIG), "run_start": -1,
+               "first_start": -1, "finish": -1, "ckpt_tier": -1}
+
+
+def pad_table(tbl: JobTable, rows: int) -> JobTable:
+    """Grow ``tbl`` to ``rows`` with inert pad rows (identity if equal)."""
+    n = tbl.cpus.shape[0]
+    if rows == n:
+        return tbl
+    assert rows > n, f"cannot shrink table {n} -> {rows}"
+    k = rows - n
+    return JobTable(**{
+        f: jnp.concatenate(
+            [getattr(tbl, f),
+             jnp.full((k,), _PAD_VALUES.get(f, 0), jnp.int32)])
+        for f in JobTable._fields})
+
+
+def is_pad(tbl: JobTable) -> jax.Array:
+    """Mask of inert pad rows (see ``_PAD_VALUES``)."""
+    return (tbl.jid == BIG) & (tbl.submit == BIG)
+
+
+def stack_tables(tables, ents) -> Tuple[JobTable, jax.Array]:
+    """Stack per-cell ``(JobTable[Ji], ent[Ui])`` pairs onto a leading
+    batch axis: pad every table to max(Ji) rows (inert rows, see
+    `pad_table`) and every entitlement vector to max(Ui) users (0 CPUs —
+    a user that owns no rows and can admit nothing), then stack.
+
+    The result feeds ``jax.vmap`` over axis 0; per-cell schedules are
+    unaffected by the padding because pad rows are never eligible, never
+    running, and sort last in every queue/victim key."""
+    rows = max(t.cpus.shape[0] for t in tables)
+    n_users = max(e.shape[0] for e in ents)
+    padded = [pad_table(t, rows) for t in tables]
+    ents = [jnp.concatenate(
+        [e, jnp.zeros((n_users - e.shape[0],), jnp.int32)])
+        if e.shape[0] < n_users else e for e in ents]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    return stacked, jnp.stack(ents)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def insert_rows(tbl: JobTable, slots: jax.Array, rows: JobTable,
+                valid: jax.Array) -> JobTable:
+    """Segment-compaction scatter for the streaming engine: overwrite
+    ``tbl[slots[i]]`` with ``rows[i]`` where ``valid[i]``, keep the
+    current row otherwise.
+
+    ``slots`` MUST be a permutation of ``arange(J)`` (the caller sends
+    every free slot first — new arrivals, then pad rows clearing the
+    compacted-out finished jobs — and the occupied slots as write-back
+    targets), so scatter indices never collide and the update is
+    order-independent.  Donates the table: between segments exactly one
+    [J]-shaped table exists.  One compile per table shape — segment
+    boundaries never re-trace (`python -m repro.analysis`, rule: retrace).
+    """
+    def put(col, new):
+        return col.at[slots].set(jnp.where(valid, new, col[slots]))
+
+    return JobTable(*[put(getattr(tbl, f), getattr(rows, f))
+                      for f in JobTable._fields])
 
 
 def signature_from_table(tbl: JobTable):

@@ -8,8 +8,10 @@ same representation.  Property tests (tests/test_policies_equivalence.py)
 assert each produces bit-identical schedules to its Python twin on
 randomized workloads, exactly like the OMFS equivalence suite.
 
-All passes share the engine's policy contract — ``pass_fn(cfg, ent, t, tbl)
--> tbl`` — and thread their admission aggregates (per-user usage, busy,
+All passes share the engine's policy contract — ``pass_fn(cfg, ent, t, tbl,
+knobs=None) -> tbl``, where ``knobs`` carries the traced per-cell
+quantum/pass-depth overrides of `engine.simulate_batch` — and thread their
+admission aggregates (per-user usage, busy,
 head reservation) through the ``fori_loop`` carry: O(1) per queue position
 for everything but backfill's once-per-tick reservation sort.
 
@@ -38,6 +40,7 @@ from repro.core.omfs_jax import (
     PENDING,
     RUNNING,
     JobTable,
+    Knobs,
     admit_job,
     apply_evictions,
     queue_order,
@@ -49,6 +52,16 @@ from repro.core.types import SchedulerConfig
 
 def _depth(n: int, pass_depth: Optional[int]) -> int:
     return n if pass_depth is None else min(pass_depth, n)
+
+
+def _mask_depth(elig: jax.Array, i, knobs: Optional[Knobs]) -> jax.Array:
+    """Batched pass-depth bound: mask queue positions past ``knobs.depth``.
+
+    Result-identical to the static ``_depth`` loop truncation — a masked
+    iteration admits nothing and updates no aggregate — but keeps the trip
+    count static so one compiled program serves every depth in a sweep
+    (`engine.simulate_batch`)."""
+    return elig if knobs is None else elig & (i < knobs.depth)
 
 
 def _est_remaining(work, overhead, progress, error: float):
@@ -66,7 +79,8 @@ def _est_remaining(work, overhead, progress, error: float):
 def make_static_partition_pass(pass_depth: Optional[int] = None):
     """Hard divisions: user blocks sized by entitlement; no pooling at all."""
 
-    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable) -> JobTable:
+    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable,
+                knobs: Optional[Knobs] = None) -> JobTable:
         n = tbl.cpus.shape[0]
         order, eligible = queue_order(tbl)
         usage0, _, _ = running_usage(tbl, ent.shape[0])
@@ -75,7 +89,8 @@ def make_static_partition_pass(pass_depth: Optional[int] = None):
             tbl, usage = carry
             idx = order[i]
             ju, jc = tbl.user[idx], tbl.cpus[idx]
-            admit = (eligible[idx] & (tbl.state[idx] == PENDING)
+            admit = (_mask_depth(eligible[idx], i, knobs)
+                     & (tbl.state[idx] == PENDING)
                      & (usage[ju] + jc <= ent[ju]))
             tbl = admit_job(tbl, idx, t, admit)
             usage = usage.at[ju].add(jnp.where(admit, jc, 0))
@@ -91,7 +106,8 @@ def make_static_partition_pass(pass_depth: Optional[int] = None):
 def make_capping_pass(pass_depth: Optional[int] = None):
     """Pooled CPUs + per-user cap at the entitlement (no over-subscription)."""
 
-    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable) -> JobTable:
+    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable,
+                knobs: Optional[Knobs] = None) -> JobTable:
         n = tbl.cpus.shape[0]
         order, eligible = queue_order(tbl)
         usage0, _, busy0 = running_usage(tbl, ent.shape[0])
@@ -100,7 +116,8 @@ def make_capping_pass(pass_depth: Optional[int] = None):
             tbl, usage, busy = carry
             idx = order[i]
             ju, jc = tbl.user[idx], tbl.cpus[idx]
-            admit = (eligible[idx] & (tbl.state[idx] == PENDING)
+            admit = (_mask_depth(eligible[idx], i, knobs)
+                     & (tbl.state[idx] == PENDING)
                      & (usage[ju] + jc <= ent[ju])
                      & (cfg.cpu_total - busy >= jc))
             tbl = admit_job(tbl, idx, t, admit)
@@ -118,7 +135,8 @@ def make_capping_pass(pass_depth: Optional[int] = None):
 def make_fcfs_pass(pass_depth: Optional[int] = None):
     """Strict first-come-first-served: the queue head blocks everyone."""
 
-    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable) -> JobTable:
+    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable,
+                knobs: Optional[Knobs] = None) -> JobTable:
         n = tbl.cpus.shape[0]
         order, eligible = queue_order(tbl)
         _, _, busy0 = running_usage(tbl, ent.shape[0])
@@ -127,7 +145,8 @@ def make_fcfs_pass(pass_depth: Optional[int] = None):
             tbl, busy, blocked = carry
             idx = order[i]
             jc = tbl.cpus[idx]
-            elig = eligible[idx] & (tbl.state[idx] == PENDING)
+            elig = _mask_depth(eligible[idx], i, knobs) & (
+                tbl.state[idx] == PENDING)
             fits = cfg.cpu_total - busy >= jc
             admit = elig & ~blocked & fits
             blocked = blocked | (elig & ~fits)   # head blocked: noone overtakes
@@ -151,8 +170,10 @@ def make_backfill_pass(estimate_error: float = 0.0, with_cr: bool = False,
     remaining runtimes (sort + cumsum over running jobs); the rest of the
     queue is a fori_loop with the (busy, reservation) carry."""
 
-    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable) -> JobTable:
+    def pass_fn(cfg: SchedulerConfig, ent, t, tbl: JobTable,
+                knobs: Optional[Knobs] = None) -> JobTable:
         n = tbl.cpus.shape[0]
+        quantum = cfg.quantum if knobs is None else knobs.quantum
         order, eligible = queue_order(tbl)
         any_pending = jnp.any(eligible)
         running = tbl.state == RUNNING
@@ -168,8 +189,11 @@ def make_backfill_pass(estimate_error: float = 0.0, with_cr: bool = False,
         # Reservation: earliest tick the head fits, assuming running jobs end
         # at their estimates (baselines._reservation_time).  Computed from the
         # pre-eviction state; only consumed when the head ends up waiting.
+        # tie-break by true job id (not row position): order-isomorphic to
+        # arange on monolithic tables (rows sorted by id) and stable when the
+        # streaming engine recycles slots out of id order
         key = jnp.where(running, est, BIG)
-        ordr = jnp.lexsort((jnp.arange(n), key))
+        ordr = jnp.lexsort((tbl.jid, key))
         cum = idle + jnp.cumsum(jnp.where(running[ordr], tbl.cpus[ordr], 0))
         crossed = cum >= head_cpus
         reservation = jnp.where(
@@ -182,7 +206,7 @@ def make_backfill_pass(estimate_error: float = 0.0, with_cr: bool = False,
             # Niu et al.: preempt checkpointable *backfilled* jobs to start
             # the head now instead of waiting for the reservation.
             evictable = (running & (tbl.jclass != NONP)
-                         & ((t - tbl.run_start) >= cfg.quantum)
+                         & ((t - tbl.run_start) >= quantum)
                          & (tbl.backfilled > 0))
             planned, enough = select_victims(tbl, evictable, idle, head_cpus)
             do_cr = any_pending & ~head_fits & enough
@@ -199,7 +223,8 @@ def make_backfill_pass(estimate_error: float = 0.0, with_cr: bool = False,
             tbl, busy = carry
             idx = order[i]
             jc = tbl.cpus[idx]
-            elig = eligible[idx] & (tbl.state[idx] == PENDING)
+            elig = _mask_depth(eligible[idx], i, knobs) & (
+                tbl.state[idx] == PENDING)
             cur_idle = cfg.cpu_total - busy
             fits = cur_idle >= jc
             # conservative: only backfill if the head reservation is kept

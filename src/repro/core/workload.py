@@ -10,8 +10,8 @@ cost model materially changes the schedule.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -88,6 +88,32 @@ def make_jobs(spec: WorkloadSpec, users: List[User]) -> List[Job]:
                                   spec.sigma_state)
         job.state_bytes = int(min(max(mib, 1.0), MAX_STATE_MIB)) * MIB
     return jobs
+
+
+def arrival_stream(jobs: Iterable[Job]) -> Iterator[Job]:
+    """Yield ``jobs`` in ascending ``(submit_time, id)`` order — the feed
+    contract of `core.engine.simulate_stream` (the streaming engine pulls
+    arrivals due before each segment's end, so the feed must be sorted)."""
+    yield from sorted(jobs, key=lambda j: (j.submit_time, j.id))
+
+
+def endless_arrivals(spec: WorkloadSpec,
+                     users: Optional[List[User]] = None) -> Iterator[Job]:
+    """Unbounded arrival stream for the streaming engine: epoch ``e`` draws
+    a fresh `make_jobs` batch (seed ``spec.seed + 1000 * e``) and shifts its
+    submit times by ``e * spec.horizon``, so arrivals flow forever in sorted
+    order while only one epoch of Job objects is materialized at a time —
+    the generator side of the bounded-memory story (the table side is
+    `simulate_stream`'s fixed capacity)."""
+    users = users if users is not None else make_users(spec)
+    epoch = 0
+    while True:
+        batch = make_jobs(replace(spec, seed=spec.seed + 1000 * epoch), users)
+        shift = epoch * spec.horizon
+        for job in sorted(batch, key=lambda j: (j.submit_time, j.id)):
+            job.submit_time += shift
+            yield job
+        epoch += 1
 
 
 def reclaim_scenario(cpu_total: int = 256, quantum: int = 10):

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _ssm_kernel(
     delta_ref,    # [chunk, bd]
@@ -105,7 +107,7 @@ def ssm_scan(
             jax.ShapeDtypeStruct((bsz, di, ds), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,159 @@
+"""Property tests for the batched sweep engine (`engine.simulate_batch`):
+ONE vmapped compiled program must be bit-identical, cell by cell, to the
+sequential per-cell `simulate(..., backend="jax")` loop — for every
+registered policy, under tiered C/R costs (spill counts included), and
+across traced quantum/pass-depth knob grids.  Plus the empty-batch /
+empty-table corner contract shared with `simulate` / `simulate_matrix`.
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine, omfs_jax
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+POLICY_NAMES = sorted(engine.POLICIES)
+HORIZON = 80
+
+
+def _workload(seed, n_users=3, cpu_total=32):
+    spec = WorkloadSpec(n_users=n_users, horizon=HORIZON, cpu_total=cpu_total,
+                        seed=seed, arrival_rate=0.15, mean_work=20,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    return users, jobs
+
+
+def _tiered_cfg(quantum=3):
+    tiers = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256),
+               CRCostModel(save_mib_per_tick=32, restore_mib_per_tick=32,
+                           save_base=1, restore_base=1)),
+        capacity_mib=(64, UNBOUNDED))
+    return SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=1,
+                           cr_tiers=tiers)
+
+
+def _assert_cell_equal(batch_res, seq_res):
+    assert omfs_jax.tables_equal(batch_res.table, seq_res.table)
+    assert np.array_equal(batch_res.busy_series(), seq_res.busy_series())
+
+
+def test_batch_matches_sequential_every_policy_tiered():
+    """All 7 policies in one batch, tiered C/R costs live (spills happen),
+    vs the sequential per-cell loop."""
+    users, jobs = _workload(seed=11)
+    cfg = _tiered_cfg()
+    cells = [engine.BatchCell(users=users, jobs=jobs, policy=p)
+             for p in POLICY_NAMES]
+    batch = engine.simulate_batch(cells, cfg, HORIZON)
+    spills = 0
+    for res, name in zip(batch, POLICY_NAMES):
+        seq = engine.simulate(users, jobs, cfg, HORIZON,
+                              policy=name, backend="jax")
+        _assert_cell_equal(res, seq)
+        assert np.array_equal(np.asarray(res.table.n_spill),
+                              np.asarray(seq.table.n_spill))
+        spills += int(np.asarray(res.table.n_spill).sum())
+    assert spills > 0, "fixture must exercise tiered spill accounting"
+
+
+def test_batch_matches_sequential_across_seeds_and_scenarios():
+    """Heterogeneous cells — different workloads (seeds/user counts) padded
+    to a common table size — each equal to its own sequential run."""
+    cfg = SchedulerConfig(cpu_total=32, quantum=4, cr_overhead=2)
+    wl = [_workload(seed=s, n_users=u) for s, u in
+          [(0, 2), (1, 3), (2, 4), (3, 3)]]
+    cells = [engine.BatchCell(users=us, jobs=js, policy=p)
+             for us, js in wl for p in ("omfs", "backfill_cr")]
+    batch = engine.simulate_batch(cells, cfg, HORIZON)
+    for cell, res in zip(cells, batch):
+        seq = engine.simulate(cell.users, cell.jobs, cfg, HORIZON,
+                              policy=cell.policy, backend="jax")
+        _assert_cell_equal(res, seq)
+
+
+def test_knob_grid_matches_static_configs():
+    """Traced quantum/pass_depth knobs vs baking the same values into the
+    config / factory — the sweep grid semantics of bench_sweep."""
+    users, jobs = _workload(seed=5)
+    base = _tiered_cfg(quantum=1)  # cell knobs override cfg.quantum
+    grid = [(q, d, p) for q in (0, 3, 9) for d in (2, None)
+            for p in ("omfs", "omfs_cheap_victim")]
+    cells = [engine.BatchCell(users=users, jobs=jobs, policy=p,
+                              quantum=q, pass_depth=d)
+             for q, d, p in grid]
+    batch = engine.simulate_batch(cells, base, HORIZON)
+    for (q, d, p), res in zip(grid, batch):
+        cfg_q = _tiered_cfg(quantum=q)
+        seq = engine.simulate(users, jobs, cfg_q, HORIZON, policy=p,
+                              backend="jax", pass_depth=d)
+        _assert_cell_equal(res, seq)
+
+
+def test_batch_runner_compiles_once_for_the_grid():
+    """The whole knob grid must ride ONE compiled program (that is the
+    entire point of traced knobs) — and repeat sweeps must reuse it."""
+    users, jobs = _workload(seed=7)
+    cfg = SchedulerConfig(cpu_total=32, quantum=2)
+    cells = [engine.BatchCell(users=users, jobs=jobs, policy="omfs",
+                              quantum=q, pass_depth=d)
+             for q in (1, 2, 5, 8) for d in (3, 7, None)]
+    engine.simulate_batch(cells, cfg, HORIZON)
+    engine.simulate_batch(cells[::-1], cfg, HORIZON)
+    runner = engine._jitted_batch_runner(
+        cfg, (engine.POLICIES["omfs"].jax_factory(None),), HORIZON, 1)
+    assert runner._cache_size() == 1
+
+
+def test_batch_rejects_unknown_policy():
+    users, jobs = _workload(seed=0)
+    with pytest.raises(ValueError, match="unknown policies"):
+        engine.simulate_batch(
+            [engine.BatchCell(users=users, jobs=jobs, policy="nope")],
+            SchedulerConfig(cpu_total=32), HORIZON)
+
+
+# ---------------------------------------------------------------------------
+# Empty-batch / empty-table corners (regression: the early-return and the
+# jitted path must agree — see ISSUE 7 bugfix satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_batch_returns_empty_list():
+    assert engine.simulate_batch([], SchedulerConfig(cpu_total=32),
+                                 HORIZON) == []
+
+
+def test_all_empty_tables_match_simulate_matrix_early_return():
+    users, _ = _workload(seed=0)
+    cfg = SchedulerConfig(cpu_total=32)
+    batch = engine.simulate_batch(
+        [engine.BatchCell(users=users, jobs=[], policy="omfs")],
+        cfg, HORIZON)
+    matrix = engine.simulate_matrix(users, [], cfg, HORIZON, ["omfs"])
+    single = engine.simulate(users, [], cfg, HORIZON,
+                             policy="omfs", backend="jax")
+    for res in (batch[0], matrix[0], single):
+        assert res.table.cpus.shape[0] == 0
+        assert np.array_equal(res.busy_series(), np.zeros(HORIZON, np.int32))
+        assert res.summary()["utilization"] == 0.0
+
+
+def test_mixed_batch_keeps_empty_cell_on_the_jitted_path():
+    """An empty cell inside a non-empty batch rides the jitted path as an
+    all-pad table; its result must equal the early-return result."""
+    users, jobs = _workload(seed=9)
+    cfg = SchedulerConfig(cpu_total=32, quantum=3)
+    mixed = engine.simulate_batch(
+        [engine.BatchCell(users=users, jobs=[], policy="omfs"),
+         engine.BatchCell(users=users, jobs=jobs, policy="omfs")],
+        cfg, HORIZON)
+    empty, full = mixed
+    assert empty.table.cpus.shape[0] == 0
+    assert np.array_equal(empty.busy_series(), np.zeros(HORIZON, np.int32))
+    _assert_cell_equal(
+        full, engine.simulate(users, jobs, cfg, HORIZON,
+                              policy="omfs", backend="jax"))
