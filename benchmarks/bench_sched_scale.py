@@ -119,6 +119,122 @@ def run_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int) -> None:
          f"(placement scan confined to the eviction branch)")
 
 
+def instrumented_case(n_jobs: int, cpu_total: int, horizon: int) -> None:
+    """Event-ring overhead gate (repro.obs): tick throughput with
+    ``record_events=True`` — in-scan capture + host-side ring decode — must
+    stay within 10% of the uninstrumented run at fleet scale (J = 10k, the
+    acceptance bar: capture is ~30 elementwise ops + one scatter on [8*J],
+    amortized to noise once a tick costs tens of ms).  Smaller runs emit
+    the row for the trajectory without the hard assert — there the sub-ms
+    jitted tick is comparable to the fixed capture/decode cost and the
+    ratio measures host speed, not the ring."""
+    import json as _json
+    import os as _os
+
+    from repro.core import engine
+    from repro.obs import registry_from_result
+
+    users, jobs = _workload(n_jobs, cpu_total)
+    cfg = SchedulerConfig(cpu_total=cpu_total, quantum=10)
+
+    def timed(record):
+        t0 = time.perf_counter()
+        res = engine.simulate(users, jobs, cfg, horizon, backend="jax",
+                              record_events=record)
+        jax.block_until_ready(res.busy)
+        return res, time.perf_counter() - t0
+
+    timed(False), timed(True)                         # warm both programs
+    t_plain = t_inst = float("inf")
+    res = None
+    # interleave plain/instrumented reps: the ratio then compares
+    # neighboring measurements, so host-speed drift across the bench run
+    # (thermal, co-tenants) cancels instead of masquerading as overhead
+    for _ in range(5):
+        _, tp = timed(False)
+        res, ti = timed(True)
+        t_plain = min(t_plain, tp)
+        t_inst = min(t_inst, ti)
+    rel = t_plain / t_inst
+    dropped = res.events_dropped_total()
+    emit(f"sched_scale/jax_instrumented_{n_jobs}jobs_ticks_per_s",
+         horizon / t_inst,
+         f"rel_to_plain={rel:.3f};events={len(res.events)};"
+         f"dropped={dropped}")
+    # DROPPED is never silent: its own row, even (especially) when zero
+    emit(f"sched_scale/instrumented_events_dropped_{n_jobs}jobs",
+         float(dropped), "lossless ring => must stay 0")
+    assert dropped == 0, \
+        f"lossless ring dropped {dropped} events at J={n_jobs}"
+    if n_jobs >= 10_000:
+        assert rel >= 0.9, (
+            f"instrumented throughput {rel:.1%} of plain at J={n_jobs} — "
+            "the event ring broke the <=10% overhead budget")
+
+    # metrics-registry JSON snapshot rides along with the bench artifacts
+    # (METRICS_*, not BENCH_*: compare_bench globs BENCH_*.json for rows)
+    outdir = _os.environ.get("BENCH_OUTDIR", ".")
+    _os.makedirs(outdir, exist_ok=True)
+    snap = _os.path.join(outdir, "METRICS_sched_scale.json")
+    with open(snap, "w") as f:
+        _json.dump(registry_from_result(res, users=users).to_json(), f,
+                   indent=1)
+    print(f"wrote {snap}")
+
+
+def profiling_case(horizon: int, capacity: int, segment_len: int) -> None:
+    """Streaming-engine profiling hooks: wall time split into compile
+    (fresh segment-runner builds), dispatch (jitted segment execution) and
+    host-side compaction (the stream boundary).  Timings are machine noise,
+    not gated rows — they land in the bench JSON and the step summary so a
+    compile-time or boundary blow-up is visible per-PR."""
+    from repro.core import engine
+    from repro.core.workload import endless_arrivals
+    from repro.obs import ProfileTimers
+
+    spec = WorkloadSpec(n_users=8, horizon=horizon, cpu_total=64, seed=3,
+                        arrival_rate=0.4, mean_work=40)
+    users = make_users(spec)
+    cfg = SchedulerConfig(cpu_total=64, quantum=10)
+    prof = ProfileTimers()
+    res = engine.simulate_stream(users, endless_arrivals(spec, users), cfg,
+                                 horizon, "omfs", capacity=capacity,
+                                 segment_len=segment_len,
+                                 record_events=True, profile=prof)
+    snap = prof.snapshot()
+    for section in ("compile", "dispatch", "compaction"):
+        s = snap.get(section, {"total_s": 0.0, "calls": 0})
+        emit(f"sched_scale/stream_profile_{section}_s", s["total_s"],
+             f"calls={s['calls']};capacity={capacity};"
+             f"segment_len={segment_len}")
+    emit("sched_scale/stream_events_dropped",
+         float(res.events_dropped_total()),
+         f"events={len(res.events)} (lossless ring => must stay 0)")
+    assert res.events_dropped_total() == 0
+
+
+def _obs_step_summary() -> None:
+    """Surface the telemetry rows (ring drops + profiling split) in the CI
+    step summary — ring overflow must never be silent (repro.obs)."""
+    import os as _os
+
+    path = _os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    from benchmarks.common import ROWS
+
+    picks = [(n, v, d) for n, v, d in ROWS
+             if "instrumented" in n or "stream_profile" in n
+             or "events_dropped" in n]
+    if not picks:
+        return
+    lines = ["## Scheduler telemetry (repro.obs)", "",
+             "| row | value | detail |", "|---|---|---|"]
+    lines += [f"| `{n}` | {v:.6g} | {d} |" for n, v, d in picks]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n\n")
+
+
 def donation_case(n_jobs: int, cpu_total: int, horizon: int) -> None:
     """Peak-memory gate for the donated table buffers (ISSUE 7 satellite).
 
@@ -183,6 +299,13 @@ def main() -> None:
     for n_jobs, cpu_total, pass_depth, horizon in cases:
         run_case(n_jobs, cpu_total, pass_depth, horizon)
     donation_case(*((64, 128, 50) if args.smoke else (2000, 4096, 50)))
+    if args.smoke:
+        instrumented_case(64, 128, 200)
+        profiling_case(horizon=60, capacity=32, segment_len=20)
+    else:
+        instrumented_case(10_000, 8192, 100)
+        profiling_case(horizon=400, capacity=256, segment_len=50)
+    _obs_step_summary()
     write_rows("sched_scale")
 
 

@@ -28,6 +28,7 @@ from repro.analysis import (  # noqa: F401  (imports populate RULES)
     ast_rules,
     concurrency,
     contracts,
+    event_schema,
     jaxpr_audit,
     known_failures,
 )

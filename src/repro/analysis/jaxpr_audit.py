@@ -270,4 +270,45 @@ def check_retrace(root: Path) -> List[Violation]:
             f"segment-boundary insert_rows compiled {ins} times — the "
             "compaction scatter must be one fixed-shape program per "
             "capacity"))
+
+    # -- instrumented runners: event capture must not retrace either --------
+    from repro.obs.events import lossless_ring_size
+    engine.simulate(users, jobs, cfg, horizon, policy="omfs", backend="jax",
+                    record_events=True)
+    engine.simulate(users, jobs, cfg, horizon, policy="omfs", backend="jax",
+                    record_events=True)
+    ring = lossless_ring_size(tbl.cpus.shape[0])
+    irunner = engine._jitted_runner_events(cfg, pass_fn, horizon, ring)
+    n = cache_size(irunner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"repeat instrumented simulate compiled {n} times — the event "
+            "ring is fixed-shape; capture must add zero retraces"))
+
+    engine.simulate_stream(users, arrival_stream(jobs), cfg, horizon,
+                           capacity=16, segment_len=5, record_events=True)
+    isrunner = engine._jitted_segment_runner_events(
+        cfg, pass_fn, 5, lossless_ring_size(16))
+    n = cache_size(isrunner)
+    if n is not None and n != 1:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            f"instrumented streaming segment runner compiled {n} times "
+            "across segments — the ring and the traced start tick must "
+            "keep it at one compile per (cfg, pass, seg_len, ring)"))
+
+    # -- confinement: instrumentation off means the SAME plain runner -------
+    # (the uninstrumented builders must not have been invalidated or
+    # duplicated by the capture wiring: their caches still hold exactly one
+    # entry each after the instrumented calls above)
+    for fn, label in ((runner, "_jitted_runner"),
+                      (srunner, "_jitted_segment_runner")):
+        n = cache_size(fn)
+        if n is not None and n != 1:
+            out.append(Violation(
+                "retrace", engine_path, 1,
+                f"{label} compiled {n} times after instrumented runs — "
+                "record_events=True must leave the uninstrumented program "
+                "untouched"))
     return out

@@ -122,6 +122,11 @@ class ClusterExecutor:
         self.policy = policy
         self.tick_seconds = tick_seconds
         self.events: List[str] = []
+        # typed lifecycle log: the same per-tick diff schema the simulator
+        # backends record (repro.obs), so executor runs feed the same
+        # metrics registry / trace exporter as simulations
+        from repro.obs.bus import EventBus
+        self.bus = EventBus()
 
     def submit(self, mj: ManagedJob) -> None:
         d = mj.descriptor
@@ -145,8 +150,10 @@ class ClusterExecutor:
             self.events.append(f"t={t} job{d.id} DONE")
             self.jobs[d.id].train_job.release()
 
+        self.bus.snapshot(st.jobs)
         _, transitions = engine.tick_python(
             st, self.policy, work_fn=work_fn, on_complete=on_complete)
+        self.bus.record_tick(st.jobs, t)
 
         for d, was, now in transitions:
             mj = self.jobs[d.id]

@@ -23,6 +23,7 @@ what the per-policy Python-vs-JAX property tests assert.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple, Union
@@ -35,6 +36,9 @@ from repro.core import omfs_jax, policies_jax
 from repro.core.baselines import ALL_BASELINES
 from repro.core.omfs import Decision, cheap_victim_pass, scheduler_pass
 from repro.core.types import ClusterState, Job, JobState, SchedulerConfig, User
+
+#: reusable no-op context (profiling-off paths in `simulate_stream`)
+_NULLCTX = contextlib.nullcontext()
 
 PythonPolicy = Callable[[ClusterState], List[Decision]]
 # JAX policy contract: pass_fn(cfg, entitled[U], t, JobTable) -> JobTable
@@ -208,6 +212,37 @@ def run_jax(users: List[User], jobs: List[Job], cfg: SchedulerConfig,
 
 
 # ---------------------------------------------------------------------------
+# Instrumented runners: the SAME tick program plus in-scan event capture.
+# Kept as separate lru_cached builders so the uninstrumented hot path above
+# stays byte-identical with instrumentation off (repro.analysis enforces the
+# confinement); the capture wraps _tick_step, it never reaches inside it.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _jitted_runner_events(cfg: SchedulerConfig, pass_fn: JaxPass,
+                          horizon: int, ring_size: int):
+    """`_jitted_runner` + per-tick event capture (`obs.jax_capture`): each
+    scan step also emits (counts[E], ring[R,3], dropped) built from the
+    tick-boundary diff.  ``ring_size`` is static per compile — the capture
+    adds fixed-shape outputs only, so the runner compiles exactly once per
+    (cfg, pass, horizon, ring) like its uninstrumented twin."""
+    from repro.obs import jax_capture
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run(tbl, ent):
+        def step(tbl, t):
+            pre = tbl
+            tbl, busy = _tick_step(cfg, ent, tbl, t, pass_fn)
+            cap = jax_capture.capture_tick(pre, tbl, t, ring_size)
+            return tbl, (busy,) + cap
+
+        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
 # Results (TickLog/SimResult live here; core.simulator re-exports them)
 # ---------------------------------------------------------------------------
 
@@ -257,9 +292,18 @@ class EngineResult:
     table: Optional["omfs_jax.JobTable"] = None        # jax backend
     busy: Optional[np.ndarray] = None                  # busy[t], both backends
     stream_stats: Optional[Dict[str, int]] = None      # simulate_stream only
+    # -- observability (record_events=True); see repro.obs -----------------
+    events: Optional[list] = None                      # List[obs.Event]
+    event_counts: Optional[np.ndarray] = None          # [T, N_EVENT_TYPES]
+    events_dropped: Optional[np.ndarray] = None        # [T] ring overflow
 
     def busy_series(self) -> np.ndarray:
         return np.asarray(self.busy)
+
+    def events_dropped_total(self) -> int:
+        if self.events_dropped is None:
+            return 0
+        return int(np.asarray(self.events_dropped).sum())
 
     def utilization(self) -> float:
         b = self.busy_series()
@@ -340,6 +384,8 @@ def simulate(
     backend: str = "python",
     *,
     pass_depth: Optional[int] = None,
+    record_events: bool = False,
+    event_ring: Optional[int] = None,
 ) -> EngineResult:
     """Run ``policy`` on ``backend`` over the same tick protocol.
 
@@ -347,6 +393,13 @@ def simulate(
     only, any ``ClusterState -> List[Decision]`` callable.  ``pass_depth``
     bounds the per-tick queue sweep on the jax backend (SLURM's
     sched_max_job_start); None sweeps the whole queue.
+
+    ``record_events=True`` additionally captures the typed per-job lifecycle
+    event log (`repro.obs`): on the python backend via an `obs.bus.EventBus`
+    tick diff, on the jax backend inside the jitted scan with a bounded
+    per-tick ring (`event_ring` overrides the per-tick capacity; the default
+    `obs.events.lossless_ring_size` can never drop — any overflow of a
+    smaller ring lands in ``EngineResult.events_dropped``, never silently).
     """
     name = policy if isinstance(policy, str) else getattr(
         policy, "__name__", "custom")
@@ -358,10 +411,18 @@ def simulate(
             j = j.clone()
             j.state = JobState.UNSUBMITTED
             state.jobs[j.id] = j
+        bus = None
+        if record_events:
+            from repro.obs.bus import EventBus
+            bus = EventBus()
         log: List[TickLog] = []
         for t in range(horizon):
             state.time = t
+            if bus is not None:
+                bus.snapshot(state.jobs)
             decisions, _ = tick_python(state, pol)
+            if bus is not None:
+                bus.record_tick(state.jobs, t)
             # 4. metrics
             per_user = {u: 0 for u in state.users}
             for j in state.running_jobs():
@@ -373,9 +434,14 @@ def simulate(
                 per_user_cpus=per_user, decisions=decisions,
             ))
         sim = SimResult(state=state, log=log)
-        return EngineResult(
+        res = EngineResult(
             policy=name, backend=backend, config=config, sim=sim,
             busy=np.asarray([tl.busy for tl in log]))
+        if bus is not None:
+            res.events = bus.events
+            res.event_counts = bus.counts_matrix(horizon)
+            res.events_dropped = bus.dropped_series(horizon)
+        return res
 
     if backend == "jax":
         if not isinstance(policy, str):
@@ -386,10 +452,32 @@ def simulate(
             raise ValueError(
                 f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
         pass_fn = POLICIES[policy].jax_factory(pass_depth)
-        tbl, busy = run_jax(users, jobs, config, horizon, pass_fn)
+        if not record_events:
+            tbl, busy = run_jax(users, jobs, config, horizon, pass_fn)
+            return EngineResult(
+                policy=name, backend=backend, config=config, table=tbl,
+                busy=np.asarray(busy))
+        from repro.obs import jax_capture
+        from repro.obs.events import lossless_ring_size
+        tbl, ent = omfs_jax.table_from_jobs(jobs, users, config.cpu_total,
+                                            config)
+        n_rows = tbl.cpus.shape[0]
+        if n_rows == 0:
+            return EngineResult(
+                policy=name, backend=backend, config=config, table=tbl,
+                busy=np.zeros((horizon,), np.int32), events=[],
+                event_counts=np.zeros((horizon, jax_capture.N_EVENT_TYPES),
+                                      np.int64),
+                events_dropped=np.zeros((horizon,), np.int64))
+        ring = lossless_ring_size(n_rows) if event_ring is None else event_ring
+        run = _jitted_runner_events(config, pass_fn, horizon, ring)
+        tbl, (busy, counts, ring_buf, dropped) = run(tbl, ent)
         return EngineResult(
             policy=name, backend=backend, config=config, table=tbl,
-            busy=np.asarray(busy))
+            busy=np.asarray(busy),
+            events=jax_capture.decode_events(counts, ring_buf, dropped),
+            event_counts=np.asarray(counts, dtype=np.int64),
+            events_dropped=np.asarray(dropped, dtype=np.int64))
 
     raise ValueError(f"unknown backend {backend!r}; use 'python' or 'jax'")
 
@@ -522,12 +610,51 @@ def _jitted_batch_runner(cfg: SchedulerConfig, pass_fns: tuple, horizon: int,
     return jax.jit(vcell, donate_argnums=(0,))
 
 
+@functools.lru_cache(maxsize=16)
+def _jitted_batch_runner_events(cfg: SchedulerConfig, pass_fns: tuple,
+                                horizon: int, ring_size: int, n_dev: int = 1):
+    """`_jitted_batch_runner` + per-cell in-scan event capture: every cell
+    of the vmapped sweep carries its own (counts, ring, dropped) series out
+    of the scan, batch-stacked on the leading axis."""
+    from repro.obs import jax_capture
+
+    def cell(tbl, ent, pidx, knobs):
+        def step(tbl, t):
+            pre = tbl
+
+            def branch(p):
+                def run_branch(tb):
+                    tb, busy = _tick_step(cfg, ent, tb, t, p, knobs)
+                    return tb, (busy,) + jax_capture.capture_tick(
+                        pre, tb, t, ring_size)
+                return run_branch
+
+            return jax.lax.switch(pidx, [branch(p) for p in pass_fns], tbl)
+
+        return jax.lax.scan(step, tbl, jnp.arange(horizon, dtype=jnp.int32))
+
+    vcell = jax.vmap(cell)
+    if n_dev > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec
+
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("b",))
+        spec = PartitionSpec("b")
+        vcell = shard_map(vcell, mesh=mesh,
+                          in_specs=(spec, spec, spec, spec),
+                          out_specs=(spec, (spec, spec, spec, spec)),
+                          check_rep=False)
+    return jax.jit(vcell, donate_argnums=(0,))
+
+
 def simulate_batch(
     cells: List[BatchCell],
     config: SchedulerConfig,
     horizon: int,
     *,
     devices: Optional[int] = None,
+    record_events: bool = False,
+    event_ring: Optional[int] = None,
 ) -> List[EngineResult]:
     """Run ``B`` independent simulations as ONE compiled batched scan.
 
@@ -572,9 +699,16 @@ def simulate_batch(
     sizes = [t.cpus.shape[0] for t, _ in built]
     if max(sizes) == 0:
         # all-empty batch: same early return simulate/simulate_matrix take
-        return [EngineResult(policy=c.policy, backend="jax", config=config,
-                             table=t, busy=np.zeros((horizon,), np.int32))
-                for c, (t, _) in zip(cells, built)]
+        out = [EngineResult(policy=c.policy, backend="jax", config=config,
+                            table=t, busy=np.zeros((horizon,), np.int32))
+               for c, (t, _) in zip(cells, built)]
+        if record_events:
+            from repro.obs.events import N_EVENT_TYPES
+            for r in out:
+                r.events = []
+                r.event_counts = np.zeros((horizon, N_EVENT_TYPES), np.int64)
+                r.events_dropped = np.zeros((horizon,), np.int64)
+        return out
 
     tbl, ent = omfs_jax.stack_tables([t for t, _ in built],
                                      [e for _, e in built])
@@ -598,17 +732,35 @@ def simulate_batch(
         ent, pidx = rep(ent), rep(pidx)
         knobs = jax.tree_util.tree_map(rep, knobs)
 
-    run = _jitted_batch_runner(config, pass_fns, horizon, n_dev)
-    final, busy = run(tbl, ent, pidx, knobs)
+    if record_events:
+        from repro.obs import jax_capture
+        from repro.obs.events import lossless_ring_size
+        ring = (lossless_ring_size(tbl.cpus.shape[1])
+                if event_ring is None else event_ring)
+        run = _jitted_batch_runner_events(config, pass_fns, horizon, ring,
+                                          n_dev)
+        final, (busy, counts, ring_buf, dropped) = run(tbl, ent, pidx, knobs)
+        counts = np.asarray(counts)
+        ring_buf = np.asarray(ring_buf)
+        dropped = np.asarray(dropped)
+    else:
+        run = _jitted_batch_runner(config, pass_fns, horizon, n_dev)
+        final, busy = run(tbl, ent, pidx, knobs)
     busy = np.asarray(busy)
     out = []
     for i, (c, J) in enumerate(zip(cells, sizes)):
         # slice the cell back out of the batch axis and drop its pad rows
         # (rows never permute in the table, so [:J] is exactly the cell)
         cell_tbl = jax.tree_util.tree_map(lambda a: a[i, :J], final)
-        out.append(EngineResult(policy=c.policy, backend="jax",
-                                config=config, table=cell_tbl,
-                                busy=busy[i]))
+        res = EngineResult(policy=c.policy, backend="jax",
+                           config=config, table=cell_tbl,
+                           busy=busy[i])
+        if record_events:
+            res.events = jax_capture.decode_events(counts[i], ring_buf[i],
+                                                   dropped[i])
+            res.event_counts = counts[i].astype(np.int64)
+            res.events_dropped = dropped[i].astype(np.int64)
+        out.append(res)
     return out
 
 
@@ -637,6 +789,28 @@ def _jitted_segment_runner(cfg: SchedulerConfig, pass_fn: JaxPass,
     return run
 
 
+@functools.lru_cache(maxsize=32)
+def _jitted_segment_runner_events(cfg: SchedulerConfig, pass_fn: JaxPass,
+                                  seg_len: int, ring_size: int):
+    """`_jitted_segment_runner` + in-scan event capture.  The ring records
+    true job ids, so recycled slots decode correctly; the start tick stays
+    traced — one compile per (cfg, pass, seg_len, ring) across the whole
+    stream, same as the uninstrumented runner."""
+    from repro.obs import jax_capture
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def run(tbl, ent, t0):
+        def step(tbl, i):
+            pre = tbl
+            tbl, busy = _tick_step(cfg, ent, tbl, t0 + i, pass_fn)
+            cap = jax_capture.capture_tick(pre, tbl, t0 + i, ring_size)
+            return tbl, (busy,) + cap
+
+        return jax.lax.scan(step, tbl, jnp.arange(seg_len, dtype=jnp.int32))
+
+    return run
+
+
 def simulate_stream(
     users: List[User],
     jobs,
@@ -647,6 +821,9 @@ def simulate_stream(
     capacity: int,
     segment_len: int,
     pass_depth: Optional[int] = None,
+    record_events: bool = False,
+    event_ring: Optional[int] = None,
+    profile=None,
 ) -> EngineResult:
     """Run an arrival *stream* through a fixed-``capacity`` JobTable in
     jitted ``segment_len``-tick chunks — unbounded workloads at bounded
@@ -677,6 +854,15 @@ def simulate_stream(
     Jobs whose ``submit_time >= horizon`` are left in the iterator and do
     not appear in the result table (the monolithic run keeps them as
     UNSUBMITTED rows — every metric still matches).
+
+    ``record_events`` captures the lifecycle event log in-scan exactly like
+    `simulate` (the ring records true job ids, so recycled slots decode
+    correctly and finished jobs' events survive compaction — they were
+    captured at their tick, before the row was archived).  ``profile`` is an
+    optional `repro.obs.profile.ProfileTimers`; when given, the stream is
+    timed into three sections — ``compile`` (segment-runner builds),
+    ``dispatch`` (jitted segment execution), ``compaction`` (the host-side
+    boundary) — surfaced by the scale bench.
     """
     if capacity <= 0:
         raise ValueError(f"capacity must be positive, got {capacity}")
@@ -686,6 +872,12 @@ def simulate_stream(
         raise ValueError(
             f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
     pass_fn = POLICIES[policy].jax_factory(pass_depth)
+
+    ring: Optional[int] = None
+    if record_events:
+        from repro.obs.events import lossless_ring_size
+        ring = (lossless_ring_size(capacity) if event_ring is None
+                else event_ring)
 
     ent = omfs_jax.entitlements(users, config.cpu_total)
     empty, _ = omfs_jax.table_from_jobs([], users, config.cpu_total, config)
@@ -729,6 +921,11 @@ def simulate_stream(
         return omfs_jax.insert_rows(tbl, jnp.asarray(slots, jnp.int32),
                                     rows, jnp.asarray(valid))
 
+    ev_counts: List[np.ndarray] = []
+    ev_rings: List[np.ndarray] = []
+    ev_dropped: List[np.ndarray] = []
+    seg_starts: List[int] = []
+
     t0 = 0
     while t0 < horizon:
         seg = min(segment_len, horizon - t0)
@@ -739,9 +936,34 @@ def simulate_stream(
                 break
             due.append(lookahead)
             lookahead = None
-        tbl = boundary(tbl)
-        runner = _jitted_segment_runner(config, pass_fn, seg)
-        tbl, busy = runner(tbl, ent, jnp.int32(t0))
+        if profile is not None:
+            with profile.section("compaction"):
+                tbl = boundary(tbl)
+        else:
+            tbl = boundary(tbl)
+        if record_events:
+            builder, key = _jitted_segment_runner_events, (
+                config, pass_fn, seg, ring)
+        else:
+            builder, key = _jitted_segment_runner, (config, pass_fn, seg)
+        # a builder cache miss means this call traces + XLA-compiles the
+        # segment program; later segments of the stream only dispatch it
+        misses = builder.cache_info().misses
+        runner = builder(*key)
+        fresh = builder.cache_info().misses > misses
+        with (profile.section("compile" if fresh else "dispatch")
+              if profile is not None else _NULLCTX):
+            if record_events:
+                tbl, (busy, cnt, rbuf, drp) = runner(tbl, ent, jnp.int32(t0))
+                busy = jax.block_until_ready(busy)
+                ev_counts.append(np.asarray(cnt))
+                ev_rings.append(np.asarray(rbuf))
+                ev_dropped.append(np.asarray(drp))
+                seg_starts.append(t0)
+            else:
+                tbl, busy = runner(tbl, ent, jnp.int32(t0))
+                if profile is not None:
+                    busy = jax.block_until_ready(busy)
         busy_parts.append(np.asarray(busy))
         stats["segments"] += 1
         t0 += seg
@@ -761,5 +983,21 @@ def simulate_stream(
         f: jnp.asarray(v[order], jnp.int32) for f, v in merged_np.items()})
     busy = (np.concatenate(busy_parts) if busy_parts
             else np.zeros((0,), np.int32))
-    return EngineResult(policy=policy, backend="jax", config=config,
-                        table=merged, busy=busy, stream_stats=stats)
+    res = EngineResult(policy=policy, backend="jax", config=config,
+                       table=merged, busy=busy, stream_stats=stats)
+    if record_events:
+        from repro.obs import jax_capture
+        from repro.obs.events import N_EVENT_TYPES
+        events = []
+        for cnt, rbuf, drp, s0 in zip(ev_counts, ev_rings, ev_dropped,
+                                      seg_starts):
+            events.extend(jax_capture.decode_events(cnt, rbuf, drp, t0=s0))
+        res.events = events
+        res.event_counts = (
+            np.concatenate(ev_counts).astype(np.int64) if ev_counts
+            else np.zeros((0, N_EVENT_TYPES), np.int64))
+        res.events_dropped = (
+            np.concatenate(ev_dropped).astype(np.int64) if ev_dropped
+            else np.zeros((0,), np.int64))
+        stats["events_dropped"] = int(res.events_dropped.sum())
+    return res

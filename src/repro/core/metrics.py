@@ -8,7 +8,7 @@ entitlement), and the thrashing cost of recurrent C/R.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, Iterable, List
 
 import numpy as np
 
@@ -104,7 +104,7 @@ def compute_metrics(result: SimResult) -> Metrics:
     wasted_frac = (executed - useful) / max(executed, 1)
 
     done = [j for j in jobs if j.state == JobState.DONE]
-    return Metrics(
+    metrics = Metrics(
         utilization=util,
         jain_fairness=jain,
         mean_wait=float(np.mean(waits)) if waits else 0.0,
@@ -121,3 +121,46 @@ def compute_metrics(result: SimResult) -> Metrics:
         violation_ticks=float(violations.mean()),
         reclaim_latency=reclaim,
     )
+    return metrics
+
+
+def event_summary(events: Iterable) -> Dict[str, float]:
+    """Reconciliation view of an `repro.obs` event log: the subset of
+    `Metrics` that is derivable from lifecycle events alone.
+
+    The point of this function is the cross-check, not novelty: for an
+    instrumented run, ``event_summary(result.events)`` must agree with the
+    table-derived numbers (``preemptions`` == sum of ``n_preemptions``,
+    ``checkpoints`` == sum of ``n_checkpoints``, per-job wait == DEFER
+    count, ...) — the property tests assert it, so a drift between the
+    event capture and the engine's own bookkeeping is a test failure, not
+    a silent skew in the dashboards.
+    """
+    from repro.obs.events import EventType
+
+    by_type = {e: 0 for e in EventType}
+    defers: Dict[int, int] = {}
+    starts: Dict[int, int] = {}
+    restores = 0
+    for ev in events:          # events arrive in canonical (tick,...) order
+        by_type[EventType(ev.etype)] += 1
+        if ev.etype == EventType.DEFER and ev.jid not in starts:
+            # pre-first-start waiting only: post-eviction requeue ticks are
+            # churn, not wait (matches first_start - submit_time)
+            defers[ev.jid] = defers.get(ev.jid, 0) + 1
+        elif ev.etype == EventType.START:
+            starts.setdefault(ev.jid, ev.tick)
+        elif ev.etype == EventType.RESTORE:
+            restores += 1
+    waits = [defers.get(jid, 0) for jid in starts]
+    return {
+        **{f"n_{e.name.lower()}": n for e, n in by_type.items()},
+        "preemptions": by_type[EventType.EVICT],
+        "checkpoints": by_type[EventType.SAVE],
+        "spilled_checkpoints": by_type[EventType.SPILL],
+        "restores": restores,
+        "jobs_started": len(starts),
+        "jobs_done": by_type[EventType.FINISH],
+        "mean_wait": float(np.mean(waits)) if waits else 0.0,
+        "p95_wait": float(np.percentile(waits, 95)) if waits else 0.0,
+    }

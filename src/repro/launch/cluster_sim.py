@@ -40,8 +40,18 @@ def main(argv=None):
                     help="per-tick queue sweep bound on the jax backend")
     ap.add_argument("--arrival-rate", type=float, default=0.08)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--events", action="store_true",
+                    help="record the typed lifecycle event log (repro.obs) "
+                         "and print its reconciliation summary")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write a Perfetto/Chrome trace of the schedule "
+                         "(implies --events)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="write the metrics-registry JSON snapshot "
+                         "(implies --events)")
     args = ap.parse_args(argv)
     backend = "jax" if args.jax else args.backend
+    record = args.events or args.trace_out or args.metrics_out
 
     spec = WorkloadSpec(n_users=args.tenants, horizon=args.horizon,
                         cpu_total=args.chips, seed=args.seed,
@@ -65,7 +75,31 @@ def main(argv=None):
 
     res = engine.simulate(
         users, jobs, cfg, args.horizon, policy=args.policy, backend=backend,
-        pass_depth=args.pass_depth if backend == "jax" else None)
+        pass_depth=args.pass_depth if backend == "jax" else None,
+        record_events=bool(record))
+
+    if record:
+        from repro.core.metrics import event_summary
+        from repro.obs import registry_from_result, trace_from_result
+        ev = event_summary(res.events)
+        print(f"events: {len(res.events)} recorded, "
+              f"{res.events_dropped_total()} dropped | starts "
+              f"{ev['jobs_started']} | restores {ev['restores']} | evicts "
+              f"{ev['preemptions']} | saves {ev['checkpoints']} | spills "
+              f"{ev['spilled_checkpoints']} | done {ev['jobs_done']}")
+        if args.metrics_out:
+            import json
+            reg = registry_from_result(res, users=users)
+            with open(args.metrics_out, "w") as fh:
+                json.dump(reg.to_json(), fh, indent=2)
+            print(f"metrics snapshot -> {args.metrics_out}")
+        if args.trace_out:
+            import json
+            trace = trace_from_result(res, users=users)
+            with open(args.trace_out, "w") as fh:
+                json.dump(trace, fh)
+            print(f"perfetto trace -> {args.trace_out} "
+                  f"(open in ui.perfetto.dev or chrome://tracing)")
 
     if backend == "jax":
         s = res.summary()

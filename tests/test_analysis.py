@@ -30,9 +30,9 @@ def run_file_rules(*names):
 def test_registry_is_complete():
     assert sorted(RULES) == [
         "backend-contract", "branch-confinement", "column-dataflow",
-        "cost-grid", "host-sync", "jaxpr-float-cast", "known-failures",
-        "lock-order", "mutable-default", "retrace", "thread-shared-state",
-        "tracer-leak"]
+        "cost-grid", "event-schema", "host-sync", "jaxpr-float-cast",
+        "known-failures", "lock-order", "mutable-default", "retrace",
+        "thread-shared-state", "tracer-leak"]
     assert "suppression" in known_rule_ids()
     for rule in RULES.values():
         assert rule.kind in ("file", "project", "trace")
@@ -142,6 +142,123 @@ def test_backend_contract_flags_missing_equivalence_entry(tmp_path):
                     "NAMES = sorted(engine.POLICIES)\n")
     assert [v for v in check_backend_contract(tmp_path)
             if "never exercised" in v.message] == []
+
+
+def _event_tree(tmp_path, *, events, capture="", metrics="", trace="",
+                engine="", kernel=""):
+    """Materialize a minimal fake tree for the event-schema rule."""
+    obs = tmp_path / "src" / "repro" / "obs"
+    core = tmp_path / "src" / "repro" / "core"
+    obs.mkdir(parents=True)
+    core.mkdir(parents=True)
+    (obs / "events.py").write_text(events)
+    if capture is not None:
+        (obs / "jax_capture.py").write_text(capture)
+    (obs / "metrics.py").write_text(metrics)
+    (obs / "trace.py").write_text(trace)
+    (core / "engine.py").write_text(engine)
+    (core / "omfs.py").write_text(kernel)
+    return tmp_path
+
+
+_SCHEMA_OK = """\
+class EventType:
+    SUBMIT = 0
+    FINISH = 1
+
+def events_from_diff(pre, jobs, t):
+    use(EventType.SUBMIT, EventType.FINISH)
+"""
+
+_CAPTURE_OK = """\
+def event_flags(pre, post, t):
+    use(EventType.SUBMIT, EventType.FINISH)
+"""
+
+_CONSUME_OK = "use(EventType.SUBMIT, EventType.FINISH)\n"
+
+
+def test_event_schema_clean_tree_passes(tmp_path):
+    from repro.analysis.event_schema import check_event_schema
+
+    root = _event_tree(tmp_path, events=_SCHEMA_OK, capture=_CAPTURE_OK,
+                       metrics=_CONSUME_OK)
+    assert check_event_schema(root) == []
+
+
+def test_event_schema_flags_unemitted_and_unconsumed(tmp_path):
+    """A declared type the Python emitter / JAX flag matrix / consumers
+    never touch is a silent telemetry hole — three distinct violations."""
+    from repro.analysis.event_schema import check_event_schema
+
+    events = ("class EventType:\n    SUBMIT = 0\n    EVICT = 1\n\n"
+              "def events_from_diff(pre, jobs, t):\n"
+              "    use(EventType.SUBMIT)\n")
+    root = _event_tree(tmp_path, events=events,
+                       capture="def event_flags(pre, post, t):\n"
+                               "    use(EventType.SUBMIT)\n",
+                       metrics="use(EventType.SUBMIT)\n")
+    msgs = [v.message for v in check_event_schema(root)]
+    assert any("events_from_diff never references" in m for m in msgs)
+    assert any("event_flags" in m for m in msgs)
+    assert any("nor the trace exporter consumes" in m for m in msgs)
+    # the declared-but-unemitted violations pin the enum member's line
+    lines = [v.line for v in check_event_schema(root)
+             if "events_from_diff" in v.message]
+    assert lines == [3]                            # EVICT = 1
+
+
+def test_event_schema_flags_phantom_reference(tmp_path):
+    from repro.analysis.event_schema import check_event_schema
+
+    root = _event_tree(tmp_path, events=_SCHEMA_OK, capture=_CAPTURE_OK,
+                       metrics=_CONSUME_OK,
+                       trace="x = EventType.TELEPORT\n")
+    got = [v for v in check_event_schema(root)
+           if "referenced but not declared" in v.message]
+    assert len(got) == 1
+    assert got[0].line == 1
+
+
+def test_event_schema_flags_hot_path_capture(tmp_path):
+    """The uninstrumented tick path referencing the capture layer breaks
+    the byte-identical guarantee; the *_events twins are exempt."""
+    from repro.analysis.event_schema import check_event_schema
+
+    engine = ("def _tick_step(cfg, tbl, t):\n"
+              "    return capture_tick(tbl, tbl, t, 8)\n"
+              "def _jitted_runner_events(cfg):\n"
+              "    return capture_tick\n")
+    root = _event_tree(tmp_path, events=_SCHEMA_OK, capture=_CAPTURE_OK,
+                       metrics=_CONSUME_OK, engine=engine)
+    got = [v for v in check_event_schema(root)
+           if "hot-path" in v.message]
+    assert len(got) == 1                           # only _tick_step, not twin
+    assert "_tick_step" in got[0].message
+
+
+def test_event_schema_flags_kernel_obs_import(tmp_path):
+    from repro.analysis.event_schema import check_event_schema
+
+    root = _event_tree(tmp_path, events=_SCHEMA_OK, capture=_CAPTURE_OK,
+                       metrics=_CONSUME_OK,
+                       kernel="from repro.obs.bus import EventBus\n")
+    got = [v for v in check_event_schema(root)
+           if "kernel imports repro.obs" in v.message]
+    assert len(got) == 1
+
+
+def test_event_schema_flags_missing_schema_files(tmp_path):
+    from repro.analysis.event_schema import check_event_schema
+
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    got = check_event_schema(tmp_path)
+    assert len(got) == 1 and "events.py missing" in got[0].message
+
+    root = _event_tree(tmp_path, events=_SCHEMA_OK, metrics=_CONSUME_OK)
+    (root / "src" / "repro" / "obs" / "jax_capture.py").unlink()
+    msgs = [v.message for v in check_event_schema(root)]
+    assert any("no in-scan emitter" in m for m in msgs)
 
 
 def test_known_failures_registry_valid_and_loadable():

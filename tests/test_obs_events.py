@@ -1,0 +1,261 @@
+"""Property tests: both backends emit bit-identical lifecycle event logs
+for every registered policy — through `simulate`, `simulate_batch` cells,
+and the `simulate_stream` conveyor — and the bounded ring never drops
+silently."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.crcost import UNBOUNDED, CRCostModel, TieredCRCostModel
+from repro.core.types import JobState, SchedulerConfig
+from repro.core.workload import (
+    WorkloadSpec,
+    arrival_stream,
+    make_jobs,
+    make_users,
+)
+from repro.obs import (
+    MAX_EVENTS_PER_JOB_PER_TICK,
+    EventType,
+    canonical_sort,
+    lossless_ring_size,
+)
+
+POLICY_NAMES = sorted(engine.POLICIES)
+
+
+def _workload(seed, n_users, horizon=100, cpu_total=32):
+    spec = WorkloadSpec(n_users=n_users, horizon=horizon, cpu_total=cpu_total,
+                        seed=seed, arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:35]
+    return users, jobs
+
+
+def _tiered_cfg(quantum=4):
+    tiers = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=4096,
+                           restore_mib_per_tick=8192),
+               CRCostModel(save_mib_per_tick=512, restore_mib_per_tick=1024,
+                           save_base=1)),
+        capacity_mib=(2_000, UNBOUNDED))
+    return SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=1,
+                           cr_tiers=tiers)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend bit-equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.integers(0, 12),
+       n_users=st.integers(2, 4))
+def test_event_log_equivalence_tiered(policy, seed, quantum, n_users):
+    """Same events, same order, both backends, under tiered C/R costs —
+    the ISSUE's headline acceptance criterion."""
+    users, jobs = _workload(seed, n_users)
+    if not jobs:
+        return
+    cfg = _tiered_cfg(quantum)
+    py = engine.simulate(users, jobs, cfg, 100, policy=policy,
+                         backend="python", record_events=True)
+    jx = engine.simulate(users, jobs, cfg, 100, policy=policy,
+                         backend="jax", record_events=True)
+    assert py.signature() == jx.signature()
+    assert canonical_sort(py.events) == canonical_sort(jx.events)
+    assert (py.event_counts == jx.event_counts).all()
+    assert py.events_dropped_total() == 0
+    assert jx.events_dropped_total() == 0
+
+
+def test_event_log_canonical_order_is_native_order():
+    """Both backends already produce the canonical (tick, etype, jid)
+    order — the sort the comparison applies is a no-op."""
+    users, jobs = _workload(3, 3)
+    cfg = _tiered_cfg()
+    for backend in ("python", "jax"):
+        res = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                              backend=backend, record_events=True)
+        assert res.events == canonical_sort(res.events)
+
+
+def test_events_reconcile_with_table_bookkeeping():
+    """The event log and the engine's own per-job counters tell the same
+    story: EVICT == n_preemptions, SAVE == n_checkpoints, SPILL ==
+    n_spills, FINISH == done jobs, and per-job pre-start DEFER count ==
+    first_start - submit_time."""
+    users, jobs = _workload(11, 3)
+    cfg = _tiered_cfg()
+    res = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                          backend="python", record_events=True)
+    jobs_by_id = res.sim.state.jobs
+    per_type = np.asarray(res.event_counts).sum(axis=0)
+    assert per_type[EventType.EVICT] == sum(
+        j.n_preemptions for j in jobs_by_id.values())
+    assert per_type[EventType.SAVE] == sum(
+        j.n_checkpoints for j in jobs_by_id.values())
+    assert per_type[EventType.SPILL] == sum(
+        j.n_spills for j in jobs_by_id.values())
+    assert per_type[EventType.FINISH] == sum(
+        1 for j in jobs_by_id.values() if j.state == JobState.DONE)
+    waits = {}
+    started = set()
+    for ev in res.events:
+        if ev.etype == EventType.DEFER and ev.jid not in started:
+            waits[ev.jid] = waits.get(ev.jid, 0) + 1
+        elif ev.etype == EventType.START:
+            started.add(ev.jid)
+    for jid in started:
+        j = jobs_by_id[jid]
+        assert waits.get(jid, 0) == j.first_start - j.submit_time
+
+
+def test_event_summary_matches_compute_metrics():
+    from repro.core.metrics import compute_metrics, event_summary
+
+    users, jobs = _workload(5, 3)
+    cfg = _tiered_cfg()
+    res = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                          backend="python", record_events=True)
+    m = compute_metrics(res.sim)
+    ev = event_summary(res.events)
+    assert ev["preemptions"] == m.preemptions
+    assert ev["checkpoints"] == m.checkpoints
+    assert ev["spilled_checkpoints"] == m.spilled_checkpoints
+    assert ev["mean_wait"] == pytest.approx(m.mean_wait)
+    assert ev["p95_wait"] == pytest.approx(m.p95_wait)
+    assert ev["jobs_done"] == m.throughput * 100
+
+
+# ---------------------------------------------------------------------------
+# batch + stream paths
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_simulate_batch_cells_carry_events(seed):
+    users, jobs = _workload(seed, 3)
+    if not jobs:
+        return
+    cfg = _tiered_cfg()
+    cells = [engine.BatchCell(users=users, jobs=jobs, policy=p)
+             for p in ("omfs", "fcfs", "backfill_cr")]
+    batch = engine.simulate_batch(cells, cfg, 100, record_events=True)
+    for cell, got in zip(cells, batch):
+        seq = engine.simulate(users, jobs, cfg, 100, policy=cell.policy,
+                              backend="jax", record_events=True)
+        assert canonical_sort(got.events) == canonical_sort(seq.events)
+        assert (got.event_counts == seq.event_counts).all()
+        assert got.events_dropped_total() == 0
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000), segment_len=st.sampled_from([7, 25, 64]))
+def test_simulate_stream_conveyor_matches_monolithic_events(
+        seed, segment_len):
+    """Ample capacity: the streaming conveyor's decoded event log (true
+    jids through recycled slots, per-segment t0 offsets) is bit-identical
+    to the monolithic run's."""
+    users, jobs = _workload(seed, 3)
+    if not jobs:
+        return
+    cfg = _tiered_cfg()
+    mono = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                           backend="jax", record_events=True)
+    st_res = engine.simulate_stream(
+        users, arrival_stream(jobs), cfg, 100, "omfs",
+        capacity=max(8, len(jobs)), segment_len=segment_len,
+        record_events=True)
+    assert st_res.stream_stats["deferrals"] == 0
+    assert canonical_sort(st_res.events) == canonical_sort(mono.events)
+    assert st_res.events_dropped_total() == 0
+
+
+# ---------------------------------------------------------------------------
+# ring sizing + overflow accounting
+# ---------------------------------------------------------------------------
+
+
+def test_lossless_ring_never_drops_and_counts_reconcile():
+    users, jobs = _workload(9, 4)
+    cfg = _tiered_cfg(quantum=1)     # quantum=1 maximizes churn
+    res = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                          backend="jax", record_events=True)
+    assert res.events_dropped_total() == 0
+    # counts ⟺ decoded events: nothing lost, nothing invented
+    assert int(np.asarray(res.event_counts).sum()) == len(res.events)
+    per_tick = np.asarray(res.event_counts).sum(axis=1)
+    n_jobs = len(jobs)
+    assert (per_tick <= MAX_EVENTS_PER_JOB_PER_TICK * n_jobs).all()
+
+
+def test_tiny_ring_records_dropped_never_silent():
+    """Forcing overflow: the decoded log shrinks but the DROPPED series
+    accounts for every lost event and the counts matrix stays exact."""
+    users, jobs = _workload(9, 4)
+    cfg = _tiered_cfg()
+    full = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                           backend="jax", record_events=True)
+    tiny = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                           backend="jax", record_events=True, event_ring=4)
+    assert tiny.events_dropped_total() > 0
+    # exact accounting: total events = decoded + dropped
+    assert (int(np.asarray(tiny.event_counts).sum())
+            == len(tiny.events) + tiny.events_dropped_total())
+    # the counts matrix itself is never lossy
+    assert (tiny.event_counts == full.event_counts).all()
+    # the surviving ring prefix is a prefix of the full log per tick
+    assert set(tiny.events) <= set(full.events)
+
+
+def test_lossless_ring_size_bound():
+    assert lossless_ring_size(0) == 8
+    assert lossless_ring_size(100) == 100 * MAX_EVENTS_PER_JOB_PER_TICK
+
+
+def test_event_ring_validates_uninstrumented_unchanged():
+    """record_events=False goes through the plain runner and yields no
+    event fields — and the busy series matches the instrumented run."""
+    users, jobs = _workload(2, 3)
+    cfg = _tiered_cfg()
+    plain = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                            backend="jax")
+    inst = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                           backend="jax", record_events=True)
+    assert plain.events is None and plain.event_counts is None
+    assert plain.signature() == inst.signature()
+    assert (plain.busy_series() == inst.busy_series()).all()
+
+
+def test_executor_bus_matches_schema():
+    """The live executor's EventBus uses the same diff schema: a pure-sim
+    descriptor run through ClusterExecutor-style snapshot/record equals
+    the engine's own event log."""
+    from repro.core.types import ClusterState
+    from repro.obs.bus import EventBus
+
+    users, jobs = _workload(4, 3)
+    cfg = _tiered_cfg()
+    ref = engine.simulate(users, jobs, cfg, 80, policy="omfs",
+                          backend="python", record_events=True)
+    # replay: same tick kernel, bus-driven capture (what executor.tick does)
+    state = ClusterState(config=cfg, users={u.name: u for u in users})
+    for j in sorted(jobs, key=lambda x: x.id):
+        j = j.clone()
+        j.state = JobState.UNSUBMITTED
+        state.jobs[j.id] = j
+    bus = EventBus()
+    pol = engine.POLICIES["omfs"].python_pass
+    for t in range(80):
+        state.time = t
+        bus.snapshot(state.jobs)
+        engine.tick_python(state, pol)
+        bus.record_tick(state.jobs, t)
+    assert bus.events == ref.events
+    assert (bus.counts_matrix(80) == ref.event_counts).all()
+    assert bus.dropped_total == 0

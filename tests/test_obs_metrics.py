@@ -1,0 +1,156 @@
+"""Metrics registry: registry content, Prometheus text exposition,
+cross-backend parity of the scrape, and the serve payloads."""
+import json
+
+import pytest
+
+from repro.core import engine
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+from repro.obs import MetricsRegistry, registry_from_result
+
+
+def _workload(seed=7, horizon=120):
+    spec = WorkloadSpec(n_users=3, horizon=horizon, cpu_total=32, seed=seed,
+                        arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    cfg = SchedulerConfig(cpu_total=32, quantum=4, cr_overhead=2)
+    return users, jobs, cfg
+
+
+def _sim(backend, seed=7, policy="omfs", horizon=120):
+    users, jobs, cfg = _workload(seed, horizon)
+    res = engine.simulate(users, jobs, cfg, horizon, policy=policy,
+                          backend=backend, record_events=True)
+    return users, res
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram_exposition():
+    reg = MetricsRegistry()
+    reg.counter("jobs_total", "jobs").inc(3, {"policy": "omfs"})
+    reg.gauge("load", "load").set(0.5)
+    h = reg.histogram("wait", "wait ticks", buckets=(1.0, 5.0))
+    h.observe(0)
+    h.observe(3)
+    h.observe(99)
+    text = reg.to_prometheus()
+    assert '# TYPE jobs_total counter' in text
+    assert 'jobs_total{policy="omfs"} 3' in text
+    assert "load 0.5" in text
+    assert 'wait_bucket{le="1"} 1' in text
+    assert 'wait_bucket{le="5"} 2' in text
+    assert 'wait_bucket{le="+Inf"} 3' in text
+    assert "wait_sum 102" in text
+    assert "wait_count 3" in text
+    # JSON snapshot carries the same numbers
+    js = reg.to_json()
+    assert js["wait"]["series"]["{}"]["count"] == 3
+    assert js["jobs_total"]["series"]['{policy="omfs"}'] == 3
+
+
+def test_registry_kind_collision_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError):
+        reg.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# registry_from_result
+# ---------------------------------------------------------------------------
+
+
+def test_registry_from_result_content():
+    users, res = _sim("python")
+    reg = registry_from_result(res, users=users)
+    for name in ("sched_events_total", "sched_events_dropped_total",
+                 "sched_wait_ticks", "sched_evictions_per_job",
+                 "sched_ckpt_saves_total", "sched_spills_total",
+                 "sched_user_share", "sched_user_cpu_ticks_total",
+                 "sched_user_entitlement", "sched_utilization"):
+        assert name in reg, name
+    # event counters match the counts matrix exactly
+    from repro.obs import EVENT_TYPE_NAMES
+    per_type = res.event_counts.sum(axis=0)
+    total = reg["sched_events_total"]
+    for name, n in zip(EVENT_TYPE_NAMES, per_type):
+        assert total.samples[(("type", name),)] == int(n)
+    # realized shares are fractions of capacity; entitlements sum <= 1
+    shares = reg["sched_user_share"].samples
+    assert shares and all(0.0 <= v <= 1.0 for v in shares.values())
+    ents = reg["sched_user_entitlement"].samples
+    assert sum(ents.values()) <= 1.0 + 1e-9
+    util = reg["sched_utilization"].samples[()]
+    assert util == pytest.approx(res.utilization())
+
+
+def test_registry_cross_backend_scrape_identical():
+    """The Prometheus text is byte-identical across backends when the
+    user list is supplied (labels resolve to the same names)."""
+    users, jobs, cfg = _workload()
+    py = engine.simulate(users, jobs, cfg, 120, policy="omfs",
+                         backend="python", record_events=True)
+    jx = engine.simulate(users, jobs, cfg, 120, policy="omfs",
+                         backend="jax", record_events=True)
+    txt_py = registry_from_result(py, users=users).to_prometheus()
+    txt_jx = registry_from_result(jx, users=users).to_prometheus()
+    assert txt_py == txt_jx
+
+
+def test_registry_requires_events():
+    users, res = _sim("python")
+    res.events = None
+    with pytest.raises(ValueError):
+        registry_from_result(res)
+
+
+def test_registry_wait_histogram_matches_first_start():
+    users, res = _sim("python")
+    reg = registry_from_result(res, users=users)
+    jobs = res.sim.state.jobs.values()
+    waits = sorted(j.first_start - j.submit_time
+                   for j in jobs if j.first_start >= 0)
+    _, total, n = reg["sched_wait_ticks"].hist[()]
+    assert n == len(waits)
+    assert total == sum(waits)
+
+
+def test_registry_json_snapshot_round_trips():
+    users, res = _sim("python")
+    js = registry_from_result(res, users=users).to_json()
+    assert json.loads(json.dumps(js)) == js
+
+
+# ---------------------------------------------------------------------------
+# serve payloads (no socket)
+# ---------------------------------------------------------------------------
+
+
+def test_serve_sched_status_payloads():
+    import argparse
+
+    from repro.launch import serve
+
+    ns = argparse.Namespace(tenants=3, horizon=80, chips=32, seed=0,
+                            arrival_rate=0.1, quantum=6, policy="omfs",
+                            backend="python")
+    payloads = serve.sched_status_payloads(ns)
+    assert set(payloads) == {"/metrics", "/trace.json", "/healthz"}
+    ctype, metrics = payloads["/metrics"]
+    assert ctype.startswith("text/plain")
+    assert b"sched_events_total" in metrics
+    _, trace = payloads["/trace.json"]
+    td = json.loads(trace)
+    assert td["traceEvents"]
+    _, health = payloads["/healthz"]
+    hd = json.loads(health)
+    assert hd["status"] == "ok"
+    assert hd["events"] > 0 and hd["events_dropped"] == 0
+    assert hd["summary"]["jobs_done"] >= 0

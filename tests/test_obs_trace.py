@@ -1,0 +1,180 @@
+"""Perfetto/Chrome trace exporter: structural validity of real traces,
+the validator's ability to catch seeded corruption, and the CLI gate."""
+import json
+
+from repro.core import engine
+from repro.core.types import SchedulerConfig
+from repro.core.workload import WorkloadSpec, make_jobs, make_users
+from repro.obs import trace_from_result, validate_trace
+from repro.obs.trace import US_PER_TICK, main as trace_main
+
+
+def _workload(seed=7, horizon=120, cpus=32, quantum=4):
+    spec = WorkloadSpec(n_users=3, horizon=horizon, cpu_total=cpus, seed=seed,
+                        arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    cfg = SchedulerConfig(cpu_total=cpus, quantum=quantum, cr_overhead=2)
+    return users, jobs, cfg
+
+
+def _sim(backend="python", seed=7, policy="omfs", horizon=120, cpus=32,
+         quantum=4):
+    users, jobs, cfg = _workload(seed, horizon, cpus, quantum)
+    res = engine.simulate(users, jobs, cfg, horizon, policy=policy,
+                          backend=backend, record_events=True)
+    return users, res
+
+
+def test_trace_is_valid_and_structured():
+    users, res = _sim()
+    trace = trace_from_result(res, users=users)
+    assert validate_trace(trace, events=res.events) == []
+    evs = trace["traceEvents"]
+    spans = [e for e in evs if e.get("ph") == "X"]
+    assert spans, "no job spans in a busy schedule"
+    # every span sits on a real CPU lane and names a known job
+    n_lanes = res.config.cpu_total
+    assert all(0 <= e["tid"] < n_lanes for e in spans)
+    assert all(e["args"]["user"] != "?" for e in spans)
+    # metadata names every lane
+    names = {e["args"]["name"] for e in evs
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert names == {f"cpu-{k:02d}" for k in range(n_lanes)}
+    # counters cover the horizon
+    busy = [e for e in evs
+            if e.get("ph") == "C" and e.get("name") == "busy_cpus"]
+    assert len(busy) == res.busy_series().size
+    assert trace["otherData"]["events_dropped"] == 0
+
+
+def test_trace_eviction_arrows_pair_and_cross_lanes():
+    # seed/cpus chosen so omfs actually evicts and restarts (4 restores)
+    users, res = _sim(policy="omfs", seed=12, cpus=16, quantum=2)
+    trace = trace_from_result(res, users=users)
+    flows = [e for e in trace["traceEvents"] if e.get("ph") in ("s", "f")]
+    starts = [e for e in flows if e["ph"] == "s"]
+    ends = [e for e in flows if e["ph"] == "f"]
+    # quantum preemption under contention produces evict->restart arrows
+    assert starts and len(starts) == len(ends)
+    by_id = {}
+    for e in flows:
+        by_id.setdefault(e["id"], []).append(e)
+    for pair in by_id.values():
+        phases = sorted(p["ph"] for p in pair)
+        # every arrow id pairs s with f, arrow points forward in time
+        assert phases.count("s") == phases.count("f")
+        ts = {p["ph"]: p["ts"] for p in pair[:2]}
+        if "s" in ts and "f" in ts:
+            assert ts["f"] >= ts["s"]
+
+
+def test_trace_cross_backend_identical():
+    users, jobs, cfg = _workload()
+    py = engine.simulate(users, jobs, cfg, 120, policy="omfs",
+                         backend="python", record_events=True)
+    jx = engine.simulate(users, jobs, cfg, 120, policy="omfs",
+                         backend="jax", record_events=True)
+    t_py = trace_from_result(py, users=users)
+    t_jx = trace_from_result(jx, users=users)
+    # normalize the backend tag, everything else must match exactly
+    t_py["otherData"]["backend"] = t_jx["otherData"]["backend"] = "any"
+    assert json.dumps(t_py, sort_keys=True) == json.dumps(t_jx,
+                                                          sort_keys=True)
+
+
+def test_trace_dropped_counter_surfaces_overflow():
+    spec = WorkloadSpec(n_users=3, horizon=100, cpu_total=32, seed=9,
+                        arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:30]
+    cfg = SchedulerConfig(cpu_total=32, quantum=4, cr_overhead=2)
+    res = engine.simulate(users, jobs, cfg, 100, policy="omfs",
+                          backend="jax", record_events=True, event_ring=4)
+    assert res.events_dropped_total() > 0
+    trace = trace_from_result(res, users=users)
+    dropped = [e for e in trace["traceEvents"]
+               if e.get("ph") == "C" and e.get("name") == "events_dropped"]
+    assert dropped, "ring overflow must surface as a counter track"
+    assert (sum(e["args"]["dropped"] for e in dropped)
+            == res.events_dropped_total())
+    assert trace["otherData"]["events_dropped"] == res.events_dropped_total()
+
+
+# ---------------------------------------------------------------------------
+# the validator actually catches corruption
+# ---------------------------------------------------------------------------
+
+
+def _valid_trace():
+    users, res = _sim()
+    return trace_from_result(res, users=users), res
+
+
+def test_validator_catches_lane_overlap():
+    trace, _ = _valid_trace()
+    spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+    clone = dict(spans[0])
+    clone["ts"] = spans[0]["ts"] + US_PER_TICK // 2   # mid-span collision
+    trace["traceEvents"].append(clone)
+    errs = validate_trace(trace)
+    assert any("overlap" in e for e in errs)
+
+
+def test_validator_catches_unpaired_flow():
+    trace, _ = _valid_trace()
+    trace["traceEvents"].append({"ph": "s", "pid": 0, "tid": 0,
+                                 "cat": "preemption", "name": "evict",
+                                 "id": 999_999, "ts": 0})
+    errs = validate_trace(trace)
+    assert any("never finished" in e for e in errs)
+
+
+def test_validator_catches_unclosed_start():
+    trace, res = _valid_trace()
+    # drop every span of some job that appears in the log
+    spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"]
+    victim = spans[-1]["args"]["jid"]
+    # keep the job "open at horizon" in the log by removing its spans
+    trace["traceEvents"] = [
+        e for e in trace["traceEvents"]
+        if not (e.get("ph") == "X" and e["args"].get("jid") == victim)]
+    from repro.obs import EventType
+    evs = [e for e in res.events
+           if not (e.jid == victim
+                   and e.etype in (EventType.EVICT, EventType.FINISH))]
+    errs = validate_trace(trace, events=evs)
+    assert any(f"job {victim}" in e for e in errs)
+
+
+def test_validator_catches_negative_duration():
+    trace, _ = _valid_trace()
+    trace["traceEvents"].append({"ph": "X", "pid": 0, "tid": 0,
+                                 "cat": "job", "name": "bogus",
+                                 "ts": 0, "dur": -5, "args": {}})
+    errs = validate_trace(trace)
+    assert any("negative duration" in e for e in errs)
+
+
+def test_validator_rejects_unserializable():
+    errs = validate_trace({"traceEvents": [{"ph": "X", "ts": object()}]})
+    assert errs and "JSON" in errs[0]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_trace_cli_writes_and_validates(tmp_path, capsys):
+    out = tmp_path / "trace.json"
+    rc = trace_main(["--backend", "python", "--horizon", "80",
+                     "--jobs", "20", "--out", str(out), "--validate"])
+    assert rc == 0
+    captured = capsys.readouterr().out
+    assert "trace valid" in captured
+    trace = json.loads(out.read_text())
+    assert trace["traceEvents"]
+    assert validate_trace(trace) == []
