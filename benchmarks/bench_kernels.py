@@ -3,21 +3,72 @@ shapes; wall times are indicative only — the TPU numbers come from the
 roofline analysis, not from this CPU container)."""
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import emit, time_us, write_rows
 from repro.kernels.ckpt_codec.ops import quantize_array
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.mlstm_scan.ops import mlstm_chunked
 from repro.kernels.moe_gmm.ops import expert_swiglu
+from repro.kernels.sched_select.ops import plan_evictions_fused
 from repro.kernels.ssm_scan.ops import selective_scan
 
 KEY = jax.random.PRNGKey(0)
 
 
-def main() -> None:
+def sched_select_rows() -> None:
+    """Interpret-mode rows for the fused victim-select/placement kernel
+    (`kernels.sched_select`, ISSUE 9): flat-cost and tiered variants at a
+    fleet-representative J.  Like every `_us` row here the wall times are
+    indicative; the gated engine-level lax-vs-pallas rows live in
+    `bench_sched_scale` and the TPU story in its roofline entry."""
+    j = 4096
+    ks = jax.random.split(KEY, 6)
+    prio = jax.random.randint(ks[0], (j,), 0, 100, jnp.int32)
+    rstart = jax.random.randint(ks[1], (j,), 0, 500, jnp.int32)
+    jid = jnp.arange(j, dtype=jnp.int32)
+    csave = jax.random.randint(ks[2], (j,), 1, 50, jnp.int32)
+    evict = jax.random.bernoulli(ks[3], 0.3, (j,))
+    cpus = jax.random.randint(ks[4], (j,), 1, 16, jnp.int32)
+    mib = jax.random.randint(ks[5], (j,), 64, 4096, jnp.int32)
+    want0 = evict
+    zeros = jnp.zeros((j,), jnp.int32)
+
+    us = time_us(lambda: plan_evictions_fused(
+        prio, rstart, jid, csave, evict, cpus, zeros, jnp.zeros((j,), bool),
+        jnp.int32(8), jnp.int32(64), jnp.int32(0), jnp.int32(0),
+        cheap=False, tiered=False, interpret=True), iters=2)
+    emit("kernel/sched_select_us", us, f"J={j};flat cost;masked bitonic+"
+         "cumsum cutoff")
+
+    us = time_us(lambda: plan_evictions_fused(
+        prio, rstart, jid, csave, evict, cpus, mib, want0,
+        jnp.int32(8), jnp.int32(64), jnp.int32(0), jnp.int32(16 << 10),
+        cheap=True, tiered=True, bounded=True, interpret=True), iters=2)
+    emit("kernel/sched_select_tiered_us", us, f"J={j};cheap-victim keys+"
+         "greedy tier placement")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sched-only", action="store_true",
+                    help="only the sched_select rows (fast enough for the "
+                         "CI bench loop; the model kernels stay manual)")
+    args = ap.parse_args(argv)
+    if args.sched_only:
+        sched_select_rows()
+        write_rows("kernels")
+        return
+    model_kernel_rows()
+    sched_select_rows()
+    write_rows("kernels")
+
+
+def model_kernel_rows() -> None:
     # flash attention, modest shape
     B, S, H, KVH, D = 1, 256, 4, 2, 64
     ks = jax.random.split(KEY, 3)
@@ -68,4 +119,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main()  # pragma: no cover

@@ -1,18 +1,31 @@
-"""Perf-hillclimb runner: A/B a dry-run cell against tuning overrides.
+"""Perf-hillclimb runner: A/B a dry-run cell against tuning overrides, or
+sweep the scheduler's tuning grid as one compiled batch.
 
-Each experiment re-lowers + re-compiles the cell with a change and reports
-the roofline-term deltas vs. the recorded baseline — the measure step of
-the hypothesis -> change -> measure -> validate loop (EXPERIMENTS.md SSPerf).
+Model mode (the original): each experiment re-lowers + re-compiles the cell
+with a change and reports the roofline-term deltas vs. the recorded
+baseline — the measure step of the hypothesis -> change -> measure ->
+validate loop (EXPERIMENTS.md SSPerf).
+
+Scheduler mode (``--sched-grid``, ISSUE 9 satellite): the
+quantum × pass_depth × victim-key grid runs through ONE
+`engine.simulate_batch` call — every cell is a batch row of a single
+compiled vmapped scan (quantum/pass_depth ride the traced `Knobs`, the
+victim-key variant is the omfs vs omfs_cheap_victim `lax.switch` index),
+so the whole grid costs one compile instead of one per cell.  The
+leaderboard ranks cells by goodput; ``--backend pallas`` routes the
+eviction machinery through the fused `kernels.sched_select` kernel.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.hillclimb --cell dbrx-132b/train_4k \
       --tag accum8 --set grad_accum=8
   PYTHONPATH=src python -m benchmarks.hillclimb --cell glm4-9b/decode_32k \
       --tag kvshard --cfg decode_kv_shard=true
+  PYTHONPATH=src python -m benchmarks.hillclimb --sched-grid \
+      --quantums 1,2,4,8 --depths 16,64 --jobs 400 --horizon 200
 """
 import argparse
 import json
-from pathlib import Path
+import time
 
 from repro.launch.dryrun import RESULTS_DIR, run_cell
 
@@ -31,15 +44,82 @@ def parse_kv(items):
     return out
 
 
+def sched_grid(args) -> None:
+    """One `simulate_batch` call for the whole scheduler tuning grid."""
+    from repro.core import engine
+    from repro.core.types import SchedulerConfig
+    from repro.core.workload import WorkloadSpec, make_jobs, make_users
+
+    quantums = [int(x) for x in args.quantums.split(",")]
+    depths = [int(x) for x in args.depths.split(",")]
+    # victim-key axis: faithful keys (priority, run_start, jid) vs the
+    # cheap-victim ordering that ranks by checkpoint cost first
+    policies = ("omfs", "omfs_cheap_victim")
+
+    gen_horizon = max(200, int(1.5 * args.jobs / (8 * 0.3)))
+    spec = WorkloadSpec(n_users=8, horizon=gen_horizon,
+                        cpu_total=args.cpu_total, seed=args.seed,
+                        arrival_rate=0.3, mean_work=40)
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:args.jobs]
+    assert len(jobs) == args.jobs, f"workload too small: {len(jobs)}"
+    cfg = SchedulerConfig(cpu_total=args.cpu_total,
+                          kernel_backend=args.backend)
+
+    cells = [engine.BatchCell(users, jobs, policy=p, quantum=q, pass_depth=d)
+             for p in policies for q in quantums for d in depths]
+    t0 = time.perf_counter()
+    results = engine.simulate_batch(cells, cfg, args.horizon)
+    wall = time.perf_counter() - t0
+
+    rows = []
+    for cell, res in zip(cells, results):
+        s = res.summary()
+        rows.append((s["goodput"], cell.policy, cell.quantum,
+                     cell.pass_depth, s["utilization"], s["preemptions"],
+                     s["spills"], s["mean_wait"], s["done"]))
+    rows.sort(key=lambda r: -r[0])
+
+    print(f"\n=== sched grid: {len(cells)} cells in ONE batched sweep "
+          f"({wall:.2f}s, {len(cells) / wall:.1f} cells/s, "
+          f"backend={args.backend}) ===")
+    print(f"{'goodput':>8} {'policy':>18} {'q':>3} {'depth':>5} "
+          f"{'util':>6} {'preempt':>7} {'spill':>5} {'wait':>6} {'done':>5}")
+    for g, p, q, d, u, pre, sp, w, done in rows:
+        print(f"{g:8.4f} {p:>18} {q:3d} {d:5d} {u:6.3f} {pre:7d} "
+              f"{sp:5d} {w:6.1f} {done:5d}")
+    g, p, q, d = rows[0][:4]
+    print(f"\nbest: policy={p} quantum={q} pass_depth={d} "
+          f"(goodput={g:.4f})")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True, help="<arch>/<shape>")
-    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cell", help="<arch>/<shape> (model A/B mode)")
+    ap.add_argument("--tag")
     ap.add_argument("--set", nargs="*", help="tuning overrides k=v "
                     "(q_chunk, kv_chunk, grad_accum)")
     ap.add_argument("--cfg", nargs="*", help="ModelConfig overrides k=v")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sched-grid", action="store_true",
+                    help="sweep the scheduler quantum x pass_depth x "
+                         "victim-key grid as one simulate_batch call")
+    ap.add_argument("--quantums", default="1,2,4,8")
+    ap.add_argument("--depths", default="16,64")
+    ap.add_argument("--jobs", type=int, default=400)
+    ap.add_argument("--horizon", type=int, default=200)
+    ap.add_argument("--cpu-total", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--backend", default="lax",
+                    choices=["lax", "pallas", "pallas_interpret"],
+                    help="kernel_backend for the eviction machinery")
     args = ap.parse_args(argv)
+
+    if args.sched_grid:
+        sched_grid(args)
+        return
+    if not args.cell or not args.tag:
+        ap.error("--cell and --tag are required (or use --sched-grid)")
 
     arch, shape = args.cell.split("/")
     override = parse_kv(args.set)

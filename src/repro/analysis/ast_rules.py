@@ -57,7 +57,12 @@ GRID_NAMES = {"cost_save", "cost_restore", "cost_save2", "cost_restore2",
 # boundaries like from_measured/ticks_from_seconds take floats on purpose)
 GRID_FUNCTIONS = {"_cost", "save_cost", "restore_cost", "compressed_mib",
                   "_ceil_div", "_saturate", "state_mib_of", "choose_tier",
-                  "feasible", "eviction_save_cost", "restart_restore_cost"}
+                  "feasible", "eviction_save_cost", "restart_restore_cost",
+                  # the fused victim-select/placement kernel family charges
+                  # the same grid (save costs, state_mib occupancy) — one
+                  # float in the kernel would break lax/pallas bit-equality
+                  "sched_select_kernel", "plan_evictions_fused",
+                  "plan_evictions_ref", "plan_evictions"}
 
 
 # ---------------------------------------------------------------------------

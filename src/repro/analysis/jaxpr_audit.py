@@ -23,6 +23,15 @@ Three trace-level invariants:
 The audit builds one small deterministic workload (J=12, two tiers with a
 tight fast tier so spilling actually happens) and traces the real
 registered passes — no fixtures, no mocks.
+
+Every trace rule runs the passes under BOTH kernel-dispatch paths
+(``SchedulerConfig.kernel_backend`` "lax" and "pallas_interpret"): the
+float-cast walk descends into the ``pallas_call`` sub-jaxpr, so the fused
+`kernels.sched_select` kernel is held to the same integer-grid bar, the
+confinement rule additionally requires the kernel call itself to sit
+behind the eviction ``cond``, and the retrace harness asserts that
+toggling the flag lands on separately cached runners (each compiled
+exactly once) instead of retracing one.
 """
 from __future__ import annotations
 
@@ -67,6 +76,16 @@ def _fixture():
     return _FIXTURE_CACHE["fx"]
 
 
+#: the two kernel-dispatch paths every trace rule audits
+BACKENDS = ("lax", "pallas_interpret")
+
+
+def _with_backend(cfg, backend: str):
+    import dataclasses
+    return cfg if backend == "lax" else dataclasses.replace(
+        cfg, kernel_backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # jaxpr walking
 # ---------------------------------------------------------------------------
@@ -95,14 +114,15 @@ def _walk_eqns(jaxpr, path=()):
             yield from _walk_eqns(sub, path + (eqn.primitive.name,))
 
 
-def _trace_pass(name: str):
-    """ClosedJaxpr of one registered policy pass over the fixture table."""
+def _trace_pass(name: str, backend: str = "lax"):
+    """ClosedJaxpr of one registered policy pass over the fixture table,
+    under the requested ``kernel_backend`` dispatch path."""
     import jax
 
     from repro.core import engine
     _, _, cfg, tbl, ent = _fixture()
+    cfg = _with_backend(cfg, backend)
     pass_fn = engine.POLICIES[name].jax_factory(None)
-    t0 = None
 
     def run(tbl, t):
         return pass_fn(cfg, ent, t, tbl)
@@ -131,26 +151,27 @@ def check_float_casts(root: Path) -> List[Violation]:
     from repro.core import engine
 
     for name in sorted(engine.POLICIES):
-        closed = _trace_pass(name)
-        for eqn, _path in _walk_eqns(closed.jaxpr):
-            if eqn.primitive.name != "convert_element_type":
-                continue
-            new = eqn.params.get("new_dtype")
-            src = eqn.invars[0].aval.dtype if eqn.invars else None
-            if new is not None and _is_float(new) and (
-                    src is None or _is_int(src)):
-                out.append(Violation(
-                    "jaxpr-float-cast", str(root / ENGINE), 1,
-                    f"policy {name!r}: traced pass converts {src} -> {new} "
-                    "— a float entering the integer cost grid breaks "
-                    "cross-backend bit-equality"))
-        for aval in closed.out_avals:
-            if hasattr(aval, "dtype") and _is_float(aval.dtype):
-                out.append(Violation(
-                    "jaxpr-float-cast", str(root / ENGINE), 1,
-                    f"policy {name!r}: pass output column has floating "
-                    f"dtype {aval.dtype}; JobTable columns must stay "
-                    "integer"))
+        for backend in BACKENDS:
+            closed = _trace_pass(name, backend)
+            for eqn, _path in _walk_eqns(closed.jaxpr):
+                if eqn.primitive.name != "convert_element_type":
+                    continue
+                new = eqn.params.get("new_dtype")
+                src = eqn.invars[0].aval.dtype if eqn.invars else None
+                if new is not None and _is_float(new) and (
+                        src is None or _is_int(src)):
+                    out.append(Violation(
+                        "jaxpr-float-cast", str(root / ENGINE), 1,
+                        f"policy {name!r} ({backend}): traced pass converts "
+                        f"{src} -> {new} — a float entering the integer "
+                        "cost grid breaks cross-backend bit-equality"))
+            for aval in closed.out_avals:
+                if hasattr(aval, "dtype") and _is_float(aval.dtype):
+                    out.append(Violation(
+                        "jaxpr-float-cast", str(root / ENGINE), 1,
+                        f"policy {name!r} ({backend}): pass output column "
+                        f"has floating dtype {aval.dtype}; JobTable columns "
+                        "must stay integer"))
     return out
 
 
@@ -161,23 +182,31 @@ def check_float_casts(root: Path) -> List[Violation]:
 def check_branch_confinement(root: Path) -> List[Violation]:
     out: List[Violation] = []
     loops = {"while", "scan", "fori"}
+    # the fused kernel call is the pallas path's whole eviction machinery —
+    # held to the same confinement bar as the lax sort/scan
+    confined = ("sort", "scan", "pallas_call")
     for name in CONFINED_POLICIES:
-        closed = _trace_pass(name)
-        for eqn, path in _walk_eqns(closed.jaxpr):
-            if eqn.primitive.name not in ("sort", "scan"):
-                continue
-            in_loop = any(p in loops for p in path)
-            if not in_loop:
-                continue        # the once-per-tick queue_order sort is fine
-            after_loop = path[max(i for i, p in enumerate(path)
-                                  if p in loops):]
-            if not any(p in ("cond", "switch") for p in after_loop):
-                out.append(Violation(
-                    "branch-confinement", str(root / OMFS_JAX), 1,
-                    f"policy {name!r}: `{eqn.primitive.name}` runs on the "
-                    "always-taken path of the per-queue-position loop "
-                    f"(ancestry {'->'.join(path)}) — eviction machinery "
-                    "must stay behind the lax.cond eviction branch"))
+        for backend in BACKENDS:
+            closed = _trace_pass(name, backend)
+            for eqn, path in _walk_eqns(closed.jaxpr):
+                if eqn.primitive.name not in confined:
+                    continue
+                in_loop = any(p in loops for p in path)
+                if not in_loop:
+                    continue    # once-per-tick (queue_order / hoisted
+                    #             victim_order) sorts are the design
+                if eqn.primitive.name == "scan" and "pallas_call" in path:
+                    continue    # kernel-internal loops are already confined
+                after_loop = path[max(i for i, p in enumerate(path)
+                                      if p in loops):]
+                if not any(p in ("cond", "switch") for p in after_loop):
+                    out.append(Violation(
+                        "branch-confinement", str(root / OMFS_JAX), 1,
+                        f"policy {name!r} ({backend}): "
+                        f"`{eqn.primitive.name}` runs on the always-taken "
+                        "path of the per-queue-position loop (ancestry "
+                        f"{'->'.join(path)}) — eviction machinery must "
+                        "stay behind the lax.cond eviction branch"))
     return out
 
 
@@ -221,6 +250,28 @@ def check_retrace(root: Path) -> List[Violation]:
             "retrace", str(root / OMFS_JAX), 1,
             f"update_state_mib triggered a retrace (cache size {n}) — it "
             "must be O(1) scatters with unchanged shapes/dtypes"))
+
+    # -- kernel-backend dispatch: toggling the flag must land on separately
+    # cached runners (the config IS the builder key), each compiled exactly
+    # once — never a retrace of one runner
+    pcfg = _with_backend(cfg, "pallas_interpret")
+    engine.simulate(users, jobs, pcfg, horizon, policy="omfs", backend="jax")
+    engine.simulate(users, jobs, cfg, horizon, policy="omfs", backend="jax")
+    engine.simulate(users, jobs, pcfg, horizon, policy="omfs", backend="jax")
+    prunner = engine._jitted_runner(pcfg, pass_fn, horizon)
+    if prunner is runner:
+        out.append(Violation(
+            "retrace", engine_path, 1,
+            "kernel_backend='pallas_interpret' resolved to the SAME cached "
+            "runner as 'lax' — the flag must key separate builders"))
+    for fn, label in ((runner, "lax"), (prunner, "pallas_interpret")):
+        n = cache_size(fn)
+        if n is not None and n != 1:
+            out.append(Violation(
+                "retrace", engine_path, 1,
+                f"toggling kernel_backend retraced the {label} runner "
+                f"(cache size {n}) — each dispatch path must keep its own "
+                "compiled program"))
 
     # -- repeat simulate_matrix: one compile for the whole policy union -----
     names = sorted(engine.POLICIES)

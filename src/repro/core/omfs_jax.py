@@ -320,20 +320,90 @@ def place_checkpoints(cfg: SchedulerConfig, tbl: JobTable, ckpt: jax.Array,
     return take_fast, save
 
 
+def _tiered(cfg: SchedulerConfig) -> bool:
+    return cfg.cr_tiers is not None and cfg.cr_tiers.n_tiers > 1
+
+
+def plan_evictions(cfg: SchedulerConfig, tbl: JobTable, evictable: jax.Array,
+                   idle: jax.Array, cpus_needed: jax.Array,
+                   cheap: bool = False, order: Optional[jax.Array] = None):
+    """The whole per-eviction decision, dispatched on ``cfg.kernel_backend``.
+
+    Returns ``(planned, enough, order, placement)``: the minimal victim
+    prefix, the feasibility bit, the victim order to reuse downstream
+    (lax path only), and the precomputed ``(take_fast, save_cost)`` tier
+    placement (pallas path only, ``None`` otherwise — `apply_evictions`
+    computes it from ``order`` when absent).
+
+    * ``"lax"`` — `victim_order` lexsort + `select_victims` cumsum cutoff;
+      placement deferred to `place_checkpoints` inside `apply_evictions`.
+    * ``"pallas"`` / ``"pallas_interpret"`` — the fused
+      `kernels.sched_select` kernel: masked bitonic sort + prefix-sum
+      cutoff + greedy fast-tier placement in one ``pallas_call``
+      (interpret mode off-TPU, or always for ``"pallas_interpret"``).
+      Placement here is computed on the pre-feasibility-mask ``planned``;
+      callers mask ``planned`` with an all-or-nothing scalar, and every
+      table write in `apply_evictions` is gated on the masked victim set,
+      so the results are bit-identical either way.
+
+    The dispatch is a static Python branch on the (hashable, jit-static)
+    config, so each backend traces its own program — toggling the flag
+    selects a different lru-cached runner, never a retrace."""
+    backend = cfg.kernel_backend
+    if backend == "lax":
+        if order is None:
+            order = victim_order(tbl, cheap)
+        planned, enough = select_victims(tbl, evictable, idle, cpus_needed,
+                                         order)
+        return planned, enough, order, None
+    if backend not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown SchedulerConfig.kernel_backend "
+                         f"{backend!r}: expected 'lax', 'pallas' or "
+                         f"'pallas_interpret'")
+    from repro.kernels.sched_select.ops import plan_evictions_fused
+    interpret = (backend == "pallas_interpret"
+                 or jax.default_backend() != "tpu")
+    tiered = _tiered(cfg)
+    if tiered:
+        cap0 = cfg.cr_tiers.capacity_mib[0]
+        bounded = cap0 >= 0
+        held0 = (tbl.state == PENDING) & (tbl.ckpt_tier == 0)
+        occ0 = jnp.sum(jnp.where(held0, tbl.state_mib, 0))
+        want0 = (tbl.jclass == CKPT) & (tbl.cost_save <= tbl.cost_save2)
+    else:
+        cap0, bounded = 0, False
+        occ0 = jnp.int32(0)
+        want0 = jnp.zeros_like(evictable)
+    planned, enough, take_fast = plan_evictions_fused(
+        tbl.priority, tbl.run_start, tbl.jid, tbl.cost_save,
+        evictable, tbl.cpus, tbl.state_mib, want0,
+        idle, cpus_needed, occ0, max(cap0, 0),
+        cheap=cheap, tiered=tiered, bounded=bounded, interpret=interpret)
+    placement = None
+    if tiered:
+        placement = (take_fast,
+                     jnp.where(take_fast, tbl.cost_save, tbl.cost_save2))
+    return planned, enough, None, placement
+
+
 def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
                     planned: jax.Array,
-                    order: Optional[jax.Array] = None) -> JobTable:
+                    order: Optional[jax.Array] = None,
+                    placement: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    ) -> JobTable:
     """Lines 33-36 for every planned victim: checkpoint (or drop) and free.
 
     With ``cfg.cr_tiers`` set, each checkpointed victim is *placed* on a
-    tier first (`place_checkpoints`, in victim ``order``) and charged that
+    tier first (``placement`` precomputed by `plan_evictions`' fused
+    kernel, else `place_checkpoints` in victim ``order``) and charged that
     tier's save cost; the placement is recorded in ``ckpt_tier`` so the
     later restore (`admit_job`) reads from the same tier."""
     is_ckpt = tbl.jclass == CKPT
     kill = planned & ~is_ckpt
     ckpt = planned & is_ckpt
-    if cfg.cr_tiers is not None and cfg.cr_tiers.n_tiers > 1:
-        take_fast, save_cost = place_checkpoints(cfg, tbl, ckpt, order)
+    if _tiered(cfg):
+        take_fast, save_cost = (place_checkpoints(cfg, tbl, ckpt, order)
+                                if placement is None else placement)
         tier_of = jnp.where(take_fast, 0, 1)
         spilled = ckpt & ~take_fast
     else:
@@ -361,10 +431,25 @@ def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
 # ---------------------------------------------------------------------------
 
 
+def _hoistable(cfg: SchedulerConfig, knobs: Optional[Knobs]) -> bool:
+    """Whether one `victim_order` per tick serves every admission (the lax
+    path's per-tick hoist).  Mid-pass admissions/evictions only move rows
+    *out* of the evictable set when ``quantum >= 1`` (an admitted job has
+    ``t - run_start == 0 < quantum``; an evicted one stops running), and
+    untouched rows keep their keys — so the stale order restricted to the
+    still-evictable rows is exactly the fresh order, which is all
+    `select_victims` / `place_checkpoints` consume.  ``quantum == 0``
+    (reachable: tests fuzz it) makes a just-admitted job immediately
+    evictable under a *new* key, and a traced ``knobs.quantum`` cannot be
+    inspected — both keep the faithful in-branch recompute."""
+    return knobs is None and cfg.quantum >= 1
+
+
 def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
                tbl: JobTable, idx: jax.Array, eligible: jax.Array,
                cheap_victims: bool = False,
-               knobs: Optional[Knobs] = None) -> JobTable:
+               knobs: Optional[Knobs] = None,
+               order: Optional[jax.Array] = None) -> JobTable:
     """Process job ``idx`` (runner, lines 18-38); no-op unless eligible and
     still pending.  Kept as the un-optimized reference the incremental pass
     is benchmarked and property-tested against."""
@@ -399,8 +484,8 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
         over = usage_per_user[tbl.user] > ent[tbl.user]
         evictable = evictable & over
 
-    order = victim_order(tbl, cheap_victims)
-    planned, enough = select_victims(tbl, evictable, idle, jc, order)
+    planned, enough, order, placement = plan_evictions(
+        cfg, tbl, evictable, idle, jc, cheap_victims, order)
 
     admit_evict = (~reject_23) & (~admit_26) & (~reject_28) & enough
     admit = eligible & (tbl.state[idx] == PENDING) & (~reject_23) & (
@@ -408,7 +493,7 @@ def _try_admit(cfg: SchedulerConfig, ent: jax.Array, t: jax.Array,
     do_evict = admit & (~admit_26)
     planned = planned & do_evict
 
-    tbl = apply_evictions(cfg, t, tbl, planned, order)
+    tbl = apply_evictions(cfg, t, tbl, planned, order, placement)
     return admit_job(tbl, idx, t, admit)
 
 
@@ -445,6 +530,13 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
         depth = n if pass_depth is None else min(pass_depth, n)
         quantum = cfg.quantum if knobs is None else knobs.quantum
 
+        # satellite hoist: one victim_order per tick (see _hoistable) —
+        # the lax path reuses it across every admission of the pass; the
+        # pallas kernel re-sorts internally (the fusion is the point), so
+        # the hoisted lexsort would only be dead weight there.
+        hoist = cfg.kernel_backend == "lax" and _hoistable(cfg, knobs)
+        vorder0 = victim_order(tbl, cheap_victims) if hoist else None
+
         if not incremental:
             def body_ref(i, tbl):
                 idx = order[i]
@@ -452,7 +544,7 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
                 if knobs is not None:
                     elig = elig & (i < knobs.depth)
                 return _try_admit(cfg, ent, t, tbl, idx, elig,
-                                  cheap_victims, knobs)
+                                  cheap_victims, knobs, vorder0)
             return jax.lax.fori_loop(0, depth, body_ref, tbl)
 
         usage0, nonp0, busy0 = running_usage(tbl, ent.shape[0])
@@ -485,13 +577,12 @@ def make_omfs_pass(pass_depth: Optional[int] = None, incremental: bool = True,
                     evictable = evictable & (tbl.user != ju)
                 if cfg.victim_filter_over_entitlement:  # beyond-paper flag
                     evictable = evictable & (usage[tbl.user] > ent[tbl.user])
-                vorder = victim_order(tbl, cheap_victims)
-                planned, enough = select_victims(tbl, evictable, idle, jc,
-                                                 vorder)
+                planned, enough, vorder, placement = plan_evictions(
+                    cfg, tbl, evictable, idle, jc, cheap_victims, vorder0)
                 admit = enough
                 planned = planned & admit
                 freed = jnp.where(planned, tbl.cpus, 0)
-                tbl = apply_evictions(cfg, t, tbl, planned, vorder)
+                tbl = apply_evictions(cfg, t, tbl, planned, vorder, placement)
                 usage = usage - jax.ops.segment_sum(
                     freed, tbl.user, num_segments=ent.shape[0])
                 busy = busy - jnp.sum(freed)

@@ -43,9 +43,9 @@ from repro.core.omfs_jax import (
     Knobs,
     admit_job,
     apply_evictions,
+    plan_evictions,
     queue_order,
     running_usage,
-    select_victims,
 )
 from repro.core.types import SchedulerConfig
 
@@ -208,11 +208,15 @@ def make_backfill_pass(estimate_error: float = 0.0, with_cr: bool = False,
             evictable = (running & (tbl.jclass != NONP)
                          & ((t - tbl.run_start) >= quantum)
                          & (tbl.backfilled > 0))
-            planned, enough = select_victims(tbl, evictable, idle, head_cpus)
+            # plan_evictions dispatches lax/pallas and hands back the
+            # victim order (or fused placement) so apply_evictions never
+            # recomputes the lexsort
+            planned, enough, vorder, placement = plan_evictions(
+                cfg, tbl, evictable, idle, head_cpus)
             do_cr = any_pending & ~head_fits & enough
             planned = planned & do_cr
             busy = busy - jnp.sum(jnp.where(planned, tbl.cpus, 0))
-            tbl = apply_evictions(cfg, t, tbl, planned)
+            tbl = apply_evictions(cfg, t, tbl, planned, vorder, placement)
             head_admit = head_fits | do_cr
 
         tbl = admit_job(tbl, head, t, head_admit)

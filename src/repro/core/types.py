@@ -106,6 +106,15 @@ class SchedulerConfig:
     avoid_self_eviction: bool = False              # never evict the requester's jobs
     elastic_shrink: bool = False                   # shrink instead of full eviction
 
+    # Which implementation serves the eviction machinery (victim sort,
+    # capacity cutoff, tier placement) inside every C/R-aware pass:
+    #   "lax"              — jnp.lexsort + lax.scan (default; best on CPU)
+    #   "pallas"           — fused `kernels.sched_select`; interprets off-TPU
+    #   "pallas_interpret" — same kernel, interpret forced (CI / tests)
+    # The flag rides every lru-cached runner key (the config is the key), so
+    # toggling it selects a separately cached runner — never a retrace.
+    kernel_backend: str = "lax"
+
     # -- the one cost expression both backends share (DESIGN.md §Tier
     # placement): the JAX backend precomputes these per JobTable column with
     # Python-int arithmetic, the Python backend evaluates them at runtime —

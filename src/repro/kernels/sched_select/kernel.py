@@ -1,0 +1,155 @@
+"""Pallas kernel: fused victim-select + tier-placement (paper lines 32-36).
+
+One ``pallas_call`` fuses the whole per-eviction decision that
+``core/omfs_jax.py`` otherwise spells as ``jnp.lexsort`` + gather + cumsum
++ ``lax.scan``:
+
+* masked victim keys — non-evictable rows pushed to ``MASK`` so the sort
+  brings the victim candidates to the front in victim-key order
+  (faithful ``(priority, run_start, jid)`` or cheap-victim
+  ``(cost_save, priority, run_start, jid)``), with the row index as a
+  final tie-break so the order is total;
+* a bitonic sort over the padded power-of-two tile, written as roll-based
+  compare-exchange (partner ``i ^ j`` = ``roll(x, -j)`` where bit ``j`` of
+  ``i`` is clear, ``roll(x, +j)`` where set) so it is gather-free — VPU
+  selects and lane rotations only, the layout Mosaic lowers well;
+* a Hillis-Steele log-step prefix sum of the freed CPUs and the paper's
+  minimal-prefix capacity cutoff;
+* the greedy cheapest-feasible fast-tier placement scan, bounded by the
+  last planned position (the victim prefix), not the full tile.
+
+Everything is int32 on ``[1, Jp]`` tiles (`Jp` = padded length, a multiple
+of 128), so the kernel inherits the engine's integer-grid bit-exactness:
+there is no arithmetic here that could round differently from the lax
+path.  The stage loops carry traced ``(k, j)`` shift amounts, so the
+traced program is O(1) in ``Jp`` — only the runtime loop trip counts grow.
+
+On CPU (and in CI) the kernel runs in interpret mode; the roll/select
+formulation is chosen for the TPU lowering, where the fused kernel keeps
+the whole decision in VMEM for one HBM round-trip (see the roofline entry
+in ``bench_sched_scale``).  Single-block kernel: ``Jp`` tiles above ~64k
+rows exceed VMEM on real TPUs and would need a multi-block variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: key for masked (non-evictable / padding) rows — sorts after any real key
+MASK = jnp.iinfo(jnp.int32).max
+
+
+def _lex_lt(a, b):
+    """Elementwise lexicographic ``a < b`` over equal-length key tuples."""
+    lt = jnp.zeros(a[0].shape, jnp.bool_)
+    eq = jnp.ones(a[0].shape, jnp.bool_)
+    for ai, bi in zip(a, b):
+        lt = lt | (eq & (ai < bi))
+        eq = eq & (ai == bi)
+    return lt
+
+
+def sched_select_kernel(prio_ref, rstart_ref, jid_ref, csave_ref, evict_ref,
+                        cpus_ref, mib_ref, want0_ref, scal_ref,
+                        row_ref, planned_ref, take_ref, enough_ref,
+                        *, cheap: bool, tiered: bool, bounded: bool):
+    """Fused plan: sorted-order rows, victim mask, fast-tier placement.
+
+    Inputs are ``[1, Jp]`` int32 (Jp a power of two >= 128); ``scal_ref``
+    is ``[1, 4]`` packing (idle, cpus_needed, occ0, cap0).  Outputs:
+    ``row_ref``/``planned_ref``/``take_ref`` are the sorted-position row
+    index / planned-victim flag / fast-tier flag (scattered back to row
+    order by the wrapper), ``enough_ref`` is the scalar feasibility bit.
+    """
+    shape = prio_ref.shape
+    jp = shape[1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    evict = evict_ref[...]
+    is_victim = evict == 1
+
+    def masked(ref):
+        return jnp.where(is_victim, ref[...], MASK)
+
+    # most-significant first; idx makes the order total (bitonic is not
+    # stable, but every real tie is already broken by the unique jid)
+    keys = [masked(prio_ref), masked(rstart_ref), masked(jid_ref), idx]
+    if cheap:
+        keys.insert(0, masked(csave_ref))
+    n_keys = len(keys)
+    vals = [evict, cpus_ref[...]]
+    if tiered:
+        vals += [mib_ref[...], want0_ref[...]]
+    arrays = tuple(keys + vals)
+
+    def partner(x, j):
+        # value at index i ^ j, j a power of two: i + j where bit j of i is
+        # clear (roll left), i - j where it is set (roll right)
+        return jnp.where((idx & j) == 0,
+                         jnp.roll(x, -j, axis=1), jnp.roll(x, j, axis=1))
+
+    def stage(_, carry):
+        k, j, arrs = carry
+        part = tuple(partner(a, j) for a in arrs)
+        # ascending blocks of size k: position i keeps the smaller element
+        # iff its direction bit and pair side agree
+        want_min = ((idx & k) == 0) == ((idx & j) == 0)
+        take_other = jnp.where(want_min, _lex_lt(part[:n_keys], arrs[:n_keys]),
+                               _lex_lt(arrs[:n_keys], part[:n_keys]))
+        arrs = tuple(jnp.where(take_other, p, a) for p, a in zip(part, arrs))
+        j = j // 2
+        k = jnp.where(j == 0, k * 2, k)
+        j = jnp.where(j == 0, k // 2, j)
+        return k, j, arrs
+
+    log2 = jp.bit_length() - 1
+    n_stages = log2 * (log2 + 1) // 2
+    _, _, arrays = jax.lax.fori_loop(
+        0, n_stages, stage, (jnp.int32(2), jnp.int32(1), arrays))
+
+    row_s = arrays[n_keys - 1]
+    live = arrays[n_keys] == 1
+    freed = jnp.where(live, arrays[n_keys + 1], 0)
+
+    def pfx(s, x):             # Hillis-Steele inclusive prefix sum
+        d = jnp.left_shift(jnp.int32(1), s)
+        return x + jnp.where(idx >= d, jnp.roll(x, d, axis=1), 0)
+
+    cum = jax.lax.fori_loop(0, log2, pfx, freed)
+
+    idle = scal_ref[0, 0]
+    cpus_needed = scal_ref[0, 1]
+    need = jnp.maximum(cpus_needed - idle, 0)
+    planned = live & (cum - freed < need)      # the minimal victim prefix
+    enough_ref[0, 0] = (idle + cum[0, jp - 1] >= cpus_needed).astype(jnp.int32)
+
+    if not tiered:
+        take = jnp.zeros(shape, jnp.int32)
+    else:
+        want = planned & (arrays[n_keys + 3] == 1)
+        if not bounded:                        # unbounded fast tier
+            take = want.astype(jnp.int32)
+        else:
+            occ0 = scal_ref[0, 2]
+            cap0 = scal_ref[0, 3]
+            mib_s = arrays[n_keys + 2]
+            want_i = want.astype(jnp.int32)
+            # greedy is sequential by nature (a skipped victim frees space a
+            # later smaller one may claim) but only over the victim prefix
+            stop = jnp.max(jnp.where(planned, idx + 1, 0))
+
+            def greedy(i, carry):
+                occ, take = carry
+                w = jax.lax.dynamic_slice(want_i, (0, i), (1, 1))[0, 0]
+                m = jax.lax.dynamic_slice(mib_s, (0, i), (1, 1))[0, 0]
+                ok = (w == 1) & (occ + m <= cap0)
+                occ = occ + jnp.where(ok, m, 0)
+                take = jax.lax.dynamic_update_slice(
+                    take, ok.astype(jnp.int32)[None, None], (0, i))
+                return occ, take
+
+            _, take = jax.lax.fori_loop(
+                0, stop, greedy, (occ0, jnp.zeros(shape, jnp.int32)))
+
+    row_ref[...] = row_s
+    planned_ref[...] = planned.astype(jnp.int32)
+    take_ref[...] = take

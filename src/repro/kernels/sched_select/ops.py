@@ -1,0 +1,71 @@
+"""Jit'd wrapper for the fused victim-select/placement kernel.
+
+`plan_evictions_fused` is what `core/omfs_jax.plan_evictions` dispatches
+to when ``SchedulerConfig.kernel_backend`` selects the pallas path.  The
+wrapper pads the columns to a power-of-two ``[1, Jp]`` tile (Jp >= 128,
+pad rows carry ``evictable=0`` so the in-kernel mask retires them), packs
+the four scalars, and scatters the sorted-position outputs back to row
+order — the only pieces kept outside the kernel, both O(J).
+
+Outputs are bit-identical to `ref.plan_evictions_ref` (and hence to the
+lax path) by construction: the kernel's masked total order restricted to
+the evictable rows equals the lexsort order restricted to them, and the
+planned/placement decisions depend on nothing else — padding and
+non-evictable rows contribute zero CPUs and can never be planned.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sched_select.kernel import sched_select_kernel
+from repro.kernels.sched_select.ref import plan_evictions_ref  # noqa: F401
+
+#: minimum padded tile — one TPU lane row
+MIN_TILE = 128
+
+
+def _padded_len(j: int) -> int:
+    return max(MIN_TILE, 1 << max(0, j - 1).bit_length())
+
+
+@partial(jax.jit, static_argnames=("cheap", "tiered", "bounded", "interpret"))
+def plan_evictions_fused(prio, run_start, jid, cost_save, evictable, cpus,
+                         state_mib, want0, idle, cpus_needed, occ0, cap0,
+                         *, cheap: bool = False, tiered: bool = False,
+                         bounded: bool = False, interpret: bool = True):
+    """Fused plan over bare columns.
+
+    ``planned`` is the paper's minimal victim prefix (lines 32-36) in the
+    requested victim-key order, ``enough`` the feasibility bit, and
+    ``take_fast`` the greedy fast-tier placement of the checkpointable
+    planned victims (all-False when ``tiered=False``).  ``bounded`` is the
+    static "fast tier has finite capacity" flag; ``occ0``/``cap0`` are
+    ignored unless set.  Returns ``(planned[J] bool, enough bool,
+    take_fast[J] bool)``.
+    """
+    j = prio.shape[0]
+    jp = _padded_len(j)
+
+    def col(x):
+        x = jnp.asarray(x, jnp.int32).reshape(1, j)
+        return jnp.pad(x, ((0, 0), (0, jp - j)))
+
+    scal = jnp.stack([jnp.asarray(v, jnp.int32)
+                      for v in (idle, cpus_needed, occ0, cap0)]).reshape(1, 4)
+    kern = partial(sched_select_kernel,
+                   cheap=cheap, tiered=tiered, bounded=bounded)
+    tile = jax.ShapeDtypeStruct((1, jp), jnp.int32)
+    row_s, planned_s, take_s, enough = pl.pallas_call(
+        kern,
+        out_shape=[tile, tile, tile, jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(col(prio), col(run_start), col(jid), col(cost_save), col(evictable),
+      col(cpus), col(state_mib), col(want0), scal)
+    planned = jnp.zeros((jp,), jnp.int32).at[row_s[0]].set(planned_s[0])[:j]
+    take = jnp.zeros((jp,), jnp.int32).at[row_s[0]].set(take_s[0])[:j]
+    return (planned.astype(bool), enough[0, 0].astype(bool),
+            take.astype(bool))

@@ -1,0 +1,49 @@
+"""Pure-jnp reference for the fused victim-select/placement kernel.
+
+Spells the exact ``jnp.lexsort`` + cumsum + ``lax.scan`` sequence that
+``core/omfs_jax.py``'s ``victim_order`` / ``select_victims`` /
+``place_checkpoints`` perform, but over bare columns — the oracle the
+kernel's property tests compare against without importing the JobTable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("cheap", "tiered", "bounded"))
+def plan_evictions_ref(prio, run_start, jid, cost_save, evictable, cpus,
+                       state_mib, want0, idle, cpus_needed, occ0, cap0,
+                       *, cheap: bool = False, tiered: bool = False,
+                       bounded: bool = False):
+    """Returns ``(planned[J], enough, take_fast[J])`` — see ops.py."""
+    keys = ((jid, run_start, prio, cost_save) if cheap
+            else (jid, run_start, prio))
+    order = jnp.lexsort(keys)
+    evictable = evictable.astype(bool)
+    evict_sorted = evictable[order]
+    cpus_sorted = jnp.where(evict_sorted, cpus[order], 0)
+    freed_cum = jnp.cumsum(cpus_sorted)
+    need = jnp.maximum(cpus_needed - idle, 0)
+    planned_sorted = evict_sorted & (freed_cum - cpus_sorted < need)
+    enough = idle + freed_cum[-1] >= cpus_needed
+    planned = jnp.zeros_like(evictable).at[order].set(planned_sorted)
+    if not tiered:
+        return planned, enough, jnp.zeros_like(evictable)
+    want_sorted = planned_sorted & want0.astype(bool)[order]
+    if not bounded:
+        take_sorted = want_sorted
+    else:
+        mib_sorted = jnp.where(want_sorted, state_mib[order], 0)
+
+        def place(occ, x):
+            want, mib = x
+            take = want & (occ + mib <= cap0)
+            return occ + jnp.where(take, mib, 0), take
+
+        _, take_sorted = jax.lax.scan(
+            place, jnp.asarray(occ0, jnp.int32), (want_sorted, mib_sorted))
+    take_fast = jnp.zeros_like(evictable).at[order].set(take_sorted)
+    return planned, enough, take_fast
