@@ -35,22 +35,27 @@ def sched_select_rows() -> None:
     evict = jax.random.bernoulli(ks[3], 0.3, (j,))
     cpus = jax.random.randint(ks[4], (j,), 1, 16, jnp.int32)
     mib = jax.random.randint(ks[5], (j,), 64, 4096, jnp.int32)
-    want0 = evict
+    is_ckpt = evict
     zeros = jnp.zeros((j,), jnp.int32)
+    # T=2 effective save lattice: fast tier = the cheap-victim key column
+    lat = jnp.stack([csave, csave * 4], axis=1)
 
     us = time_us(lambda: plan_evictions_fused(
         prio, rstart, jid, csave, evict, cpus, zeros, jnp.zeros((j,), bool),
-        jnp.int32(8), jnp.int32(64), jnp.int32(0), jnp.int32(0),
+        jnp.zeros((j, 1), jnp.int32),
+        jnp.int32(8), jnp.int32(64), jnp.zeros((1,), jnp.int32),
+        jnp.full((1,), -1, jnp.int32),
         cheap=False, tiered=False, interpret=True), iters=2)
     emit("kernel/sched_select_us", us, f"J={j};flat cost;masked bitonic+"
          "cumsum cutoff")
 
     us = time_us(lambda: plan_evictions_fused(
-        prio, rstart, jid, csave, evict, cpus, mib, want0,
-        jnp.int32(8), jnp.int32(64), jnp.int32(0), jnp.int32(16 << 10),
+        prio, rstart, jid, csave, evict, cpus, mib, is_ckpt, lat,
+        jnp.int32(8), jnp.int32(64), jnp.zeros((2,), jnp.int32),
+        jnp.asarray([16 << 10, -1], jnp.int32),
         cheap=True, tiered=True, bounded=True, interpret=True), iters=2)
     emit("kernel/sched_select_tiered_us", us, f"J={j};cheap-victim keys+"
-         "greedy tier placement")
+         "greedy tier placement over the [J,T] lattice")
 
 
 def main(argv=None) -> None:

@@ -127,6 +127,53 @@ def _tiered_cfg(cpu_total: int, backend: str = "lax") -> SchedulerConfig:
             capacity_mib=(16 << 10, UNBOUNDED)))
 
 
+def _lattice_cfg(cpu_total: int) -> SchedulerConfig:
+    """T=4 HBM/DRAM/NVMe/object hierarchy with the measured delta
+    coefficients (182/256, `crcost.measured_delta_num`) — the [J, T]
+    lattice's stress case: four save/restore columns ride the victim sort
+    and the greedy placement walks four capacity lanes."""
+    from repro.core.crcost import measured_delta_num
+    d = measured_delta_num()
+    return SchedulerConfig(
+        cpu_total=cpu_total, quantum=10,
+        cr_tiers=TieredCRCostModel(
+            tiers=(CRCostModel(save_mib_per_tick=8192,
+                               restore_mib_per_tick=16384,
+                               delta_num=d, delta_den=256),
+                   CRCostModel(save_mib_per_tick=4096,
+                               restore_mib_per_tick=8192, save_base=1,
+                               delta_num=d, delta_den=256),
+                   CRCostModel(save_mib_per_tick=512,
+                               restore_mib_per_tick=1024, save_base=1,
+                               restore_base=1, delta_num=d, delta_den=256),
+                   CRCostModel(save_mib_per_tick=64,
+                               restore_mib_per_tick=128, save_base=2,
+                               restore_base=2, delta_num=d, delta_den=256)),
+            capacity_mib=(4 << 10, 16 << 10, 64 << 10, UNBOUNDED)))
+
+
+def lattice_case(n_jobs: int, cpu_total: int, pass_depth,
+                 horizon: int) -> None:
+    """[J, T] cost-lattice throughput gate (ISSUE 10): a T=4 delta-aware
+    hierarchy must hold tick throughput within 10% of the T=2 two-column
+    model at fleet scale — the extra tiers are more int32 lanes on the
+    existing sort/scan, never extra passes."""
+    users, jobs = _workload(n_jobs, cpu_total)
+    _, _, t_two = _time_jax(users, jobs, _tiered_cfg(cpu_total), horizon,
+                            pass_depth, True)
+    _, _, t_lat = _time_jax(users, jobs, _lattice_cfg(cpu_total), horizon,
+                            pass_depth, True)
+    rel = t_two / t_lat
+    emit(f"sched_scale/jax_lattice_{n_jobs}jobs_ticks_per_s",
+         horizon / t_lat,
+         f"rel_to_two_column={rel:.3f};tiers=4;delta=182/256;"
+         "(>=0.9 at J>=10k keeps the lattice inside the perf budget)")
+    if n_jobs >= 10_000:
+        assert rel >= 0.9, (
+            f"T=4 lattice throughput {rel:.1%} of the two-column model at "
+            f"J={n_jobs} — the lattice broke the <=10% overhead budget")
+
+
 def backend_case(n_jobs: int, cpu_total: int, pass_depth, horizon: int,
                  reps: int = 3) -> None:
     """The tentpole A/B: eviction machinery served by the ``lax`` path
@@ -385,6 +432,8 @@ def main() -> None:
         run_case(n_jobs, cpu_total, pass_depth, horizon)
     for n_jobs, cpu_total, pass_depth, horizon, reps in backend_cases:
         backend_case(n_jobs, cpu_total, pass_depth, horizon, reps)
+    lattice_case(*((64, 128, None, 200) if args.smoke
+                   else (10_000, 8192, 64, 100)))
     sched_roofline_entry()
     donation_case(*((64, 128, 50) if args.smoke else (2000, 4096, 50)))
     if args.smoke:

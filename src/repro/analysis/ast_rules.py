@@ -50,14 +50,19 @@ TAINT_ROOTS = ("jnp.", "lax.", "jax.lax.", "jax.ops.", "jax.nn.")
 LAUNDER_CALLS = {"jax.device_get", "np.asarray", "np.array", "device_get"}
 SYNC_CALLS = {"np.asarray", "np.array", "jax.device_get", "device_get"}
 HOST_CONVERSIONS = {"int", "bool", "float"}
-# the /256 integer cost grid: JobTable columns priced by core.crcost
-GRID_NAMES = {"cost_save", "cost_restore", "cost_save2", "cost_restore2",
+# the /256 integer cost grid: JobTable columns priced by core.crcost —
+# the [J, T] lattice columns plus the legacy view accessors over them
+GRID_NAMES = {"cost_save_lat", "cost_rsave_lat", "cost_restore_lat",
+              "cost_save", "cost_restore", "cost_save2", "cost_restore2",
               "state_mib", "overhead"}
 # CRCostModel evaluation path: must stay integer end-to-end (calibration
-# boundaries like from_measured/ticks_from_seconds take floats on purpose)
-GRID_FUNCTIONS = {"_cost", "save_cost", "restore_cost", "compressed_mib",
+# boundaries like from_measured/measured_delta_num/ticks_from_seconds take
+# floats on purpose)
+GRID_FUNCTIONS = {"_cost", "save_cost", "recurrent_save_cost",
+                  "restore_cost", "compressed_mib", "delta_mib",
                   "_ceil_div", "_saturate", "state_mib_of", "choose_tier",
                   "feasible", "eviction_save_cost", "restart_restore_cost",
+                  "effective_save_lat", "tier_occupancy",
                   # the fused victim-select/placement kernel family charges
                   # the same grid (save costs, state_mib occupancy) — one
                   # float in the kernel would break lax/pallas bit-equality

@@ -172,4 +172,15 @@ def check_column_dataflow(root: Path) -> List[Violation]:
             f"JobTable column {col!r} is written by table_from_jobs but "
             "never read anywhere in src/repro — dead state in the "
             "fixed-size table"))
+
+    # -- migration guard: the legacy two-column accessors must stay views
+    # over the [J, T] lattice (DESIGN.md §Cost lattice), never fields —
+    # re-declaring one would silently fork the cost state
+    legacy = {"cost_save", "cost_save2", "cost_restore", "cost_restore2"}
+    for name in sorted(legacy & fields):
+        out.append(Violation(
+            "column-dataflow", str(omfs_jax_path), 1,
+            f"legacy cost accessor {name!r} re-declared as a JobTable "
+            "field — it must remain a read-only view over cost_save_lat/"
+            "cost_restore_lat"))
     return out

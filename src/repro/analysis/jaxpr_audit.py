@@ -20,9 +20,10 @@ Three trace-level invariants:
   compilation cache (``_cache_size() == 1``).  A retrace per tick/call
   silently turns throughput into compile time.
 
-The audit builds one small deterministic workload (J=12, two tiers with a
-tight fast tier so spilling actually happens) and traces the real
-registered passes — no fixtures, no mocks.
+The audit builds one small deterministic workload (J=12, a T=3 cost
+lattice with tight fast tiers so spilling actually happens, and
+delta-aware recurrent-save coefficients so both lattice columns are live)
+and traces the real registered passes — no fixtures, no mocks.
 
 Every trace rule runs the passes under BOTH kernel-dispatch paths
 (``SchedulerConfig.kernel_backend`` "lax" and "pallas_interpret"): the
@@ -65,10 +66,14 @@ def _fixture():
     users = make_users(spec)
     jobs = make_jobs(spec, users)[:12]
     tiers = TieredCRCostModel(
-        tiers=(CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256),
+        tiers=(CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256,
+                           delta_num=141, delta_den=256),
+               CRCostModel(save_mib_per_tick=64, restore_mib_per_tick=64,
+                           delta_num=182, delta_den=256),
                CRCostModel(save_mib_per_tick=32, restore_mib_per_tick=32,
-                           save_base=1, restore_base=1)),
-        capacity_mib=(64, UNBOUNDED))
+                           save_base=1, restore_base=1,
+                           delta_num=182, delta_den=256)),
+        capacity_mib=(48, 96, UNBOUNDED))
     cfg = SchedulerConfig(cpu_total=16, quantum=2, cr_overhead=1,
                           cr_tiers=tiers)
     tbl, ent = omfs_jax.table_from_jobs(jobs, users, cfg.cpu_total, cfg)

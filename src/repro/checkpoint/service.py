@@ -10,16 +10,19 @@ get
   transparent C/R pair, timed and byte-counted;
 * ``stats()`` — one `CRStats` aggregate over every tier (bytes moved, wall
   seconds, save/restore counts);
-* ``calibrate(tick_seconds)`` — the bridge to the scheduler: measured
-  bandwidths become a `core.crcost.CRCostModel`, so the simulated
-  cost-per-eviction and the real executor's measured overhead are expressed
-  in the same units (DESIGN.md §C/R cost model).
+* ``calibrate(tick_seconds, tiers=...)`` — the bridge to the scheduler:
+  measured bandwidths become a `core.crcost.CRCostModel` (``tiers=None``)
+  or the `TieredCRCostModel` cost lattice (``tiers=("mem", "disk")``), so
+  the simulated cost-per-eviction and the real executor's measured
+  overhead are expressed in the same units (DESIGN.md §C/R cost model,
+  §Cost lattice).  ``calibrate_tiered`` remains as a deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Dict, Optional, Sequence, Tuple
 
 from repro.checkpoint.manager import CheckpointManager, ManagerConfig
 from repro.core.crcost import (
@@ -104,35 +107,53 @@ class CheckpointService:
         """Per-tier breakdown, for the bandwidth benchmarks."""
         return {"mem": self.manager.mem.stats, "disk": self.manager.disk.stats}
 
-    def calibrate(self, tick_seconds: float, *, compress_ratio: float = 1.0,
+    def calibrate(self, tick_seconds: float, *,
+                  tiers: Optional[Sequence[str]] = None,
+                  compress_ratio: float = 1.0,
                   save_base: int = 0, restore_base: int = 0,
-                  cap_ticks: int = DEFAULT_CAP_TICKS) -> CRCostModel:
-        """Measured traffic -> a scheduler cost model.
+                  delta_ratio: float = 1.0,
+                  cap_ticks: int = DEFAULT_CAP_TICKS):
+        """Measured traffic -> a scheduler cost model (the unified entry).
 
         ``tick_seconds`` is the wall length of one scheduler tick (the
-        executor's unit); requires at least one measured save."""
-        return CRCostModel.from_stats(
-            self.stats(), tick_seconds=tick_seconds,
-            compress_ratio=compress_ratio, save_base=save_base,
-            restore_base=restore_base, cap_ticks=cap_ticks)
+        executor's unit); requires at least one measured save.
+        ``delta_ratio`` is the measured recurrent-save coefficient
+        (`crcost.measured_delta_num` quantizes the bench_cr_cost blend).
+
+        ``tiers=None`` returns a flat `CRCostModel` from the service-level
+        aggregate.  ``tiers`` as a sequence of tier names (from
+        ``tier_stats()``, fastest first — e.g. ``("mem", "disk")``)
+        returns the `TieredCRCostModel` lattice over those tiers: the
+        "mem" tier is capacity-bounded at the manager's real
+        ``mem_capacity_bytes`` on the whole-MiB grid, the last tier is
+        forced UNBOUNDED (the durable spill target).  A tier with no
+        measured save traffic inherits the fastest measured tier's model."""
+        if tiers is None:
+            return CRCostModel.from_stats(
+                self.stats(), tick_seconds=tick_seconds,
+                compress_ratio=compress_ratio, save_base=save_base,
+                restore_base=restore_base, cap_ticks=cap_ticks,
+                delta_ratio=delta_ratio)
+        ts = self.tier_stats()
+        caps = {"mem": self.manager.fast_capacity_mib, "disk": UNBOUNDED}
+        return TieredCRCostModel.from_stats(
+            [ts[name] for name in tiers], tick_seconds=tick_seconds,
+            capacity_mib=[caps.get(name, UNBOUNDED) for name in tiers],
+            compress_ratio=compress_ratio, cap_ticks=cap_ticks,
+            delta_ratio=delta_ratio)
 
     def calibrate_tiered(self, tick_seconds: float, *,
                          compress_ratio: float = 1.0,
                          cap_ticks: int = DEFAULT_CAP_TICKS,
                          ) -> TieredCRCostModel:
-        """Per-tier measured traffic -> a tiered placement model.
-
-        Tier 0 is the MemTier (fast, capacity-bounded at the manager's
-        real ``mem_capacity_bytes`` on the whole-MiB grid), tier 1 the
-        DiskTier (durable, the UNBOUNDED spill target) — exactly the pair
-        `CheckpointManager.durable_every` alternates between.  A tier with
-        no measured save traffic inherits the fastest measured tier's
-        model; requires at least one measured save somewhere."""
-        ts = self.tier_stats()
-        return TieredCRCostModel.from_stats(
-            [ts["mem"], ts["disk"]], tick_seconds=tick_seconds,
-            capacity_mib=(self.manager.fast_capacity_mib, UNBOUNDED),
-            compress_ratio=compress_ratio, cap_ticks=cap_ticks)
+        """Deprecated shim: use ``calibrate(tiers=("mem", "disk"))``."""
+        warnings.warn(
+            "CheckpointService.calibrate_tiered is deprecated; use "
+            "calibrate(tiers=('mem', 'disk'))", DeprecationWarning,
+            stacklevel=2)
+        return self.calibrate(tick_seconds, tiers=("mem", "disk"),
+                              compress_ratio=compress_ratio,
+                              cap_ticks=cap_ticks)
 
     def close(self) -> None:
         self.manager.close()

@@ -29,8 +29,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -226,20 +227,39 @@ class ClusterExecutor:
                 agg.restore_seconds += s.restore_seconds
         return agg
 
-    def calibrate(self, tick_seconds: Optional[float] = None,
-                  **kw) -> CRCostModel:
-        """A `CRCostModel` from the fleet's measured save/restore traffic —
+    def calibrate(self, tick_seconds: Optional[float] = None, *,
+                  tiers: Optional[Sequence[str]] = None, **kw):
+        """A cost model from the fleet's measured save/restore traffic —
         run real jobs under the executor, calibrate, then drive what-if
         sweeps on the JAX backend with simulation and execution agreeing on
-        the cost units."""
+        the cost units.  The unified entry (the `CheckpointService` twin):
+        ``tiers=None`` prices the service-level aggregate into a flat
+        `CRCostModel`; ``tiers`` as tier names from ``tier_stats()``
+        (fastest first, e.g. ``("mem", "disk")``) returns the
+        `TieredCRCostModel` lattice, with the fast-tier capacity the
+        smallest MemTier across managed jobs (conservative: the simulator
+        never places more than the tightest real host holds)."""
         ts = tick_seconds if tick_seconds is not None else self.tick_seconds
         if not ts:
             raise ValueError("calibrate() needs tick_seconds")
-        return CRCostModel.from_stats(self.cr_stats(), tick_seconds=ts, **kw)
+        if tiers is None:
+            return CRCostModel.from_stats(self.cr_stats(), tick_seconds=ts,
+                                          **kw)
+        caps = [mj.ckpt.manager.fast_capacity_mib
+                for mj in self.jobs.values()
+                if isinstance(mj.ckpt, CheckpointService)]
+        if not caps:
+            raise ValueError("no managed CheckpointService to calibrate from")
+        stats = self.tier_stats()
+        cap_of = {"mem": min(caps), "disk": UNBOUNDED}
+        return TieredCRCostModel.from_stats(
+            [stats[name] for name in tiers], tick_seconds=ts,
+            capacity_mib=[cap_of.get(name, UNBOUNDED) for name in tiers],
+            **kw)
 
     def tier_stats(self) -> Dict[str, TierStats]:
         """Fleet-wide per-tier traffic: every managed `CheckpointService`'s
-        MemTier/DiskTier counters summed (the split `calibrate_tiered`
+        MemTier/DiskTier counters summed (the split ``calibrate(tiers=...)``
         prices the tiers from)."""
         agg = {"mem": TierStats(), "disk": TierStats()}
         for mj in self.jobs.values():
@@ -253,22 +273,12 @@ class ClusterExecutor:
 
     def calibrate_tiered(self, tick_seconds: Optional[float] = None,
                          **kw) -> TieredCRCostModel:
-        """A `TieredCRCostModel` from the fleet's measured per-tier traffic
-        — the eviction-placement twin of `calibrate()`.  The fast-tier
-        capacity is the smallest MemTier across managed jobs (conservative:
-        the simulator never places more than the tightest real host holds)."""
-        ts = tick_seconds if tick_seconds is not None else self.tick_seconds
-        if not ts:
-            raise ValueError("calibrate_tiered() needs tick_seconds")
-        caps = [mj.ckpt.manager.fast_capacity_mib
-                for mj in self.jobs.values()
-                if isinstance(mj.ckpt, CheckpointService)]
-        if not caps:
-            raise ValueError("no managed CheckpointService to calibrate from")
-        stats = self.tier_stats()
-        return TieredCRCostModel.from_stats(
-            [stats["mem"], stats["disk"]], tick_seconds=ts,
-            capacity_mib=(min(caps), UNBOUNDED), **kw)
+        """Deprecated shim: use ``calibrate(tiers=("mem", "disk"))``."""
+        warnings.warn(
+            "ClusterExecutor.calibrate_tiered is deprecated; use "
+            "calibrate(tiers=('mem', 'disk'))", DeprecationWarning,
+            stacklevel=2)
+        return self.calibrate(tick_seconds, tiers=("mem", "disk"), **kw)
 
 
 def small_train_job(tmpdir: Path, *, arch_cfg, vocab=None, seq=64, batch=8,

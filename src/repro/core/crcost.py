@@ -18,6 +18,15 @@ saturated at ``cap_ticks`` — so the same expression evaluates on Python
 ints and on ``jnp.int32`` arrays, which is what keeps the Python reference
 and the vectorized JAX backend bit-identical (DESIGN.md §C/R cost model).
 
+The model is **delta-aware** (two-coefficient ``(first, recurrent)``): the
+FIRST save of a job prices the full compressed image; every subsequent
+save of the same job prices the *delta* against the previous snapshot —
+``recurrent_save_cost`` moves ``ceil(c(m) * delta_num / delta_den)`` MiB
+instead of ``c(m)``.  The coefficient lives on the same /256 rational grid
+as compression; the default ``(1, 1)`` makes recurrent saves identical to
+first saves (exact legacy behaviour).  `measured_delta_num` quantizes the
+coefficient measured by ``benchmarks/bench_cr_cost.py``.
+
 Determinism rules (load-bearing for cross-backend equality):
 
 * all arithmetic is integer; ``ceil`` is ``(a + b - 1) // b``;
@@ -99,6 +108,8 @@ class CRCostModel:
     save_tick_den: int = 1           # bandwidth = mib_per_tick / tick_den
     restore_tick_den: int = 1
     cap_ticks: int = DEFAULT_CAP_TICKS
+    delta_num: int = 1               # recurrent save moves c(m) * num / den
+    delta_den: int = 1
 
     def __post_init__(self):
         assert self.compress_num >= 0 and self.compress_den >= 1
@@ -111,14 +122,24 @@ class CRCostModel:
         assert 1 <= self.save_tick_den <= 256
         assert 1 <= self.restore_tick_den <= 256
         assert self.cap_ticks >= 0
+        # a delta can never move more than the full image, and the /256 cap
+        # keeps compressed_mib * delta_num inside int32 (2**22 * 256 = 2**30)
+        assert 1 <= self.delta_den <= 256
+        assert 0 <= self.delta_num <= self.delta_den, \
+            "recurrent saves move at most the full image (num <= den)"
 
     # -- the model ----------------------------------------------------------
     def compressed_mib(self, state_mib):
         """Effective MiB moved after compression (int or jnp array)."""
         return _ceil_div(state_mib * self.compress_num, self.compress_den)
 
-    def _cost(self, state_mib, mib_per_tick: int, tick_den: int, base: int):
-        moved = self.compressed_mib(state_mib)
+    def delta_mib(self, state_mib):
+        """Effective MiB a RECURRENT save moves: the delta against the
+        previous snapshot, ``ceil(c(m) * delta_num / delta_den)``."""
+        return _ceil_div(self.compressed_mib(state_mib) * self.delta_num,
+                         self.delta_den)
+
+    def _cost(self, moved, mib_per_tick: int, tick_den: int, base: int):
         if mib_per_tick > 0:
             var = _ceil_div(moved * tick_den, mib_per_tick)
         else:
@@ -126,14 +147,23 @@ class CRCostModel:
         return _saturate(base + var, self.cap_ticks)
 
     def save_cost(self, state_mib):
-        """Work units charged at eviction-checkpoint; int in, int out —
-        or elementwise over a jnp int32 array."""
-        return self._cost(state_mib, self.save_mib_per_tick,
+        """Work units charged at a job's FIRST eviction-checkpoint (full
+        image); int in, int out — or elementwise over a jnp int32 array."""
+        return self._cost(self.compressed_mib(state_mib),
+                          self.save_mib_per_tick,
+                          self.save_tick_den, self.save_base)
+
+    def recurrent_save_cost(self, state_mib):
+        """Work units charged when a job that already holds a previous
+        snapshot is evicted again — only the delta is moved."""
+        return self._cost(self.delta_mib(state_mib),
+                          self.save_mib_per_tick,
                           self.save_tick_den, self.save_base)
 
     def restore_cost(self, state_mib):
         """Work units charged at restart-restore (same polymorphism)."""
-        return self._cost(state_mib, self.restore_mib_per_tick,
+        return self._cost(self.compressed_mib(state_mib),
+                          self.restore_mib_per_tick,
                           self.restore_tick_den, self.restore_base)
 
     @property
@@ -155,6 +185,7 @@ class CRCostModel:
         save_base: int = 0,
         restore_base: int = 0,
         cap_ticks: int = DEFAULT_CAP_TICKS,
+        delta_ratio: float = 1.0,
     ) -> "CRCostModel":
         """Build a model from measured bandwidths.
 
@@ -168,7 +199,9 @@ class CRCostModel:
         bandwidth was taken on *raw* traffic that will additionally be
         compressed — stats whose wall time already includes compression
         (e.g. `CheckpointService` save timings) are an *effective* raw
-        bandwidth and want the default 1.0.
+        bandwidth and want the default 1.0.  ``delta_ratio`` is the
+        measured recurrent-save fraction (delta bytes / full image bytes,
+        see `measured_delta_num`); it quantizes to /256ths as well.
         """
         def mib_per_tick(bps: float):
             if bps <= 0:
@@ -176,6 +209,7 @@ class CRCostModel:
             return max(1, int(round(bps * tick_seconds / MIB * 256)))
 
         num = max(0, min(1024, int(round(compress_ratio * 256))))
+        dnum = max(0, min(256, int(round(delta_ratio * 256))))
         return cls(
             save_mib_per_tick=mib_per_tick(save_bytes_per_s),
             restore_mib_per_tick=mib_per_tick(restore_bytes_per_s),
@@ -186,13 +220,16 @@ class CRCostModel:
             save_tick_den=256,
             restore_tick_den=256,
             cap_ticks=cap_ticks,
+            delta_num=dnum,
+            delta_den=256,
         )
 
     @classmethod
     def from_stats(cls, stats: Any, *, tick_seconds: float,
                    compress_ratio: float = 1.0, save_base: int = 0,
                    restore_base: int = 0,
-                   cap_ticks: int = DEFAULT_CAP_TICKS) -> "CRCostModel":
+                   cap_ticks: int = DEFAULT_CAP_TICKS,
+                   delta_ratio: float = 1.0) -> "CRCostModel":
         """Calibrate from measured tier statistics.
 
         ``stats`` is anything exposing bytes/seconds counters —
@@ -218,7 +255,7 @@ class CRCostModel:
             save_bytes_per_s=save_bps, restore_bytes_per_s=restore_bps,
             tick_seconds=tick_seconds, compress_ratio=compress_ratio,
             save_base=save_base, restore_base=restore_base,
-            cap_ticks=cap_ticks)
+            cap_ticks=cap_ticks, delta_ratio=delta_ratio)
 
     # -- executor accounting -------------------------------------------------
     @staticmethod
@@ -236,6 +273,28 @@ class CRCostModel:
 #: `TieredCRCostModel.capacity_mib` convention: a negative capacity means
 #: "unbounded" (the durable/spill tier); 0 means the tier holds nothing.
 UNBOUNDED = -1
+
+#: Measured recurrent-save coefficients from `benchmarks/bench_cr_cost.py`:
+#: a delta-chunk zstd-compresses to 0.549 of its raw size, and on average
+#: 0.64 of a recurrent image is dirty (the rest dedups against the previous
+#: snapshot).  The blended per-image coefficient is
+#: ``frac * ratio + (1 - frac)`` — dirty chunks move at the delta ratio,
+#: clean chunks still cost their (tiny) dedup-index entry ~ full weight.
+MEASURED_DELTA_ZSTD = 0.549
+MEASURED_DELTA_FRAC = 0.64
+
+
+def measured_delta_num(ratio: float = MEASURED_DELTA_ZSTD,
+                       frac: float = MEASURED_DELTA_FRAC) -> int:
+    """Quantize the blended recurrent-save coefficient to the /256 grid.
+
+    With the measured defaults: 0.64 * 0.549 + 0.36 = 0.71136 -> 182.
+    Pass the result as ``CRCostModel(delta_num=..., delta_den=256)``.
+    This is a float->grid calibration boundary like `from_measured`; the
+    models themselves stay integer-only.
+    """
+    eff = frac * ratio + (1.0 - frac)
+    return max(0, min(256, int(round(eff * 256))))
 
 
 @dataclass(frozen=True)
@@ -284,6 +343,9 @@ class TieredCRCostModel:
     def save_cost(self, tier: int, state_mib):
         return self.tiers[tier].save_cost(state_mib)
 
+    def recurrent_save_cost(self, tier: int, state_mib):
+        return self.tiers[tier].recurrent_save_cost(state_mib)
+
     def restore_cost(self, tier: int, state_mib):
         return self.tiers[tier].restore_cost(state_mib)
 
@@ -291,20 +353,23 @@ class TieredCRCostModel:
         cap = self.capacity_mib[tier]
         return cap < 0 or occupied_mib + state_mib <= cap
 
-    def choose_tier(self, state_mib: int,
-                    occupied_mib: Sequence[int]) -> int:
+    def choose_tier(self, state_mib: int, occupied_mib: Sequence[int],
+                    recurrent: bool = False) -> int:
         """Greedy cheapest-feasible placement for one eviction.
 
         Among tiers with room for ``state_mib`` on top of ``occupied_mib``,
         pick the one with the lowest save cost (ties break toward the
         lower/faster tier index).  If nothing fits, spill to the last tier
-        (always feasible by the UNBOUNDED invariant)."""
+        (always feasible by the UNBOUNDED invariant).  ``recurrent`` prices
+        the placement with the delta coefficient — a warm job shops for a
+        tier with its real (smaller) write in hand."""
+        cost = (self.recurrent_save_cost if recurrent else self.save_cost)
         best = self.n_tiers - 1
-        best_cost = self.save_cost(best, state_mib)
+        best_cost = cost(best, state_mib)
         for k in range(self.n_tiers - 1):
             if not self.feasible(k, state_mib, occupied_mib[k]):
                 continue
-            c = self.save_cost(k, state_mib)
+            c = cost(k, state_mib)
             if c < best_cost or (c == best_cost and k < best):
                 best, best_cost = k, c
         return best
@@ -313,7 +378,8 @@ class TieredCRCostModel:
     def from_stats(cls, tier_stats: Sequence[Any], *, tick_seconds: float,
                    capacity_mib: Sequence[int],
                    compress_ratio: float = 1.0,
-                   cap_ticks: int = DEFAULT_CAP_TICKS) -> "TieredCRCostModel":
+                   cap_ticks: int = DEFAULT_CAP_TICKS,
+                   delta_ratio: float = 1.0) -> "TieredCRCostModel":
         """Calibrate one model per measured tier (mirrors
         `CheckpointManager`'s MemTier/DiskTier stats pair).
 
@@ -331,7 +397,8 @@ class TieredCRCostModel:
             if saved and getattr(st, "save_seconds", 0.0) > 0:
                 m = CRCostModel.from_stats(
                     st, tick_seconds=tick_seconds,
-                    compress_ratio=compress_ratio, cap_ticks=cap_ticks)
+                    compress_ratio=compress_ratio, cap_ticks=cap_ticks,
+                    delta_ratio=delta_ratio)
                 if fallback is None:
                     fallback = m
             else:

@@ -73,6 +73,9 @@ def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
     dec.evicted.append(victim.id)
     victim.n_preemptions += 1
     if victim.job_class == JobClass.CHECKPOINTABLE:
+        # delta-aware: a job that already checkpointed once only writes the
+        # delta on every later save — decide BEFORE bumping the counter.
+        recurrent = victim.n_checkpoints > 0
         victim.n_checkpoints += 1
         # snapshot write: place the image on a tier (greedy cheapest-
         # feasible, spilling past full tiers), then charge the legacy flat
@@ -81,14 +84,15 @@ def _evict(state: ClusterState, victim: Job, dec: Decision) -> None:
         # PENDING by now), so placement is sequential-greedy by construction.
         tiers = state.config.cr_tiers
         if tiers is not None:
-            tier = tiers.choose_tier(victim.state_mib, _tier_occupancy(state))
+            tier = tiers.choose_tier(victim.state_mib, _tier_occupancy(state),
+                                     recurrent=recurrent)
         else:
             tier = 0
         victim.ckpt_tier = tier
         if tier > 0:
             victim.n_spills += 1
         victim.overhead += state.config.eviction_save_cost(
-            victim.state_mib, tier)
+            victim.state_mib, tier, recurrent=recurrent)
         victim.state = JobState.PENDING          # line 35: back to Jobs_Submitted
         # memoryless: re-queued with its original priority; progress is kept
         # (transparent C/R) — the whole point of the paper.

@@ -25,24 +25,32 @@ state the next decision sees), so the pass is a ``fori_loop`` over queue
 positions; the ``pass_depth`` knob (same as SLURM's sched_max_job_start)
 bounds it at scale.
 
-C/R costs are size-aware (`core.crcost.CRCostModel`): the table carries
-per-job ``state_mib`` plus precomputed ``cost_save``/``cost_restore``
-columns (sizes are static, so the model evaluates once at build time), and
-the shared primitives charge them — `apply_evictions` adds the save cost to
-each checkpointed victim, `admit_job` adds the restore cost when a job with
-an existing checkpoint restarts.  Both are O(1) scatters, so the
-non-eviction fast path does no extra O(J) work.
+C/R costs are size-aware (`core.crcost.CRCostModel`) and live in a
+``[J, T]`` **cost lattice**: the table carries per-job ``state_mib`` plus
+three precomputed lattices — ``cost_save_lat`` (first save per tier),
+``cost_rsave_lat`` (recurrent/delta save per tier) and ``cost_restore_lat``
+(restore per tier) — one column per tier of ``cfg.cr_tiers`` (T=1 when
+untiered).  Sizes are static per job (until `update_state_mib`), so the
+model evaluates once at build time with Python-int arithmetic — the exact
+numbers the Python backend charges at runtime, which is what makes
+cross-backend bit-equality hold by construction.  The shared primitives
+charge from the lattice: `apply_evictions` adds the placed tier's save
+cost (first or recurrent, by ``n_ckpt``) to each checkpointed victim,
+`admit_job` adds the restore cost of the tier the snapshot was placed on.
+Both are O(1) gathers/scatters, so the non-eviction fast path does no
+extra O(J) work.  The legacy two-column accessors (``cost_save``,
+``cost_save2``, ``cost_restore``, ``cost_restore2``) remain as read-only
+views over the lattice for compatibility.
 
 Tiered eviction placement (`SchedulerConfig.cr_tiers`,
-`core.crcost.TieredCRCostModel`): the table additionally carries the
-durable-tier cost columns (``cost_save2``/``cost_restore2``) and the
-runtime ``ckpt_tier`` column recording where each pending job's latest
-snapshot lives.  `apply_evictions` places each victim greedily (cheapest
-feasible tier, spilling when the capacity-bounded fast tier is full) with
-a short ``lax.scan`` in victim order — confined to the eviction branch, so
+`core.crcost.TieredCRCostModel`): the runtime ``ckpt_tier`` column records
+where each pending job's latest snapshot lives.  `apply_evictions` places
+each victim greedily (cheapest feasible tier over the T lattice columns,
+spilling down the hierarchy when capacity-bounded tiers are full) with a
+short ``lax.scan`` in victim order — confined to the eviction branch, so
 the admit fast path stays O(1) — and `admit_job` charges the restore cost
 of the *placed* tier, then frees the slot.  Sizes may change at runtime
-via `update_state_mib` (O(1) scatters recomputing the cost columns with
+via `update_state_mib` (O(1) scatters recomputing the lattice rows with
 the same arithmetic, no re-trace of the jitted scan).
 """
 from __future__ import annotations
@@ -59,6 +67,9 @@ from repro.core.types import JobClass, SchedulerConfig
 # JobState encoding (matches types.JobState)
 UNSUB, PENDING, RUNNING, DONE, KILLED = 0, 1, 2, 3, 4
 BIG = jnp.int32(2**30)
+#: infeasible-tier sentinel for the placement argmin: larger than any real
+#: lattice entry (costs saturate at cap_ticks << int32 max)
+MASK = jnp.int32(jnp.iinfo(jnp.int32).max)
 NONP = int(JobClass.NON_PREEMPTIBLE)
 CKPT = int(JobClass.CHECKPOINTABLE)
 
@@ -79,16 +90,15 @@ class JobTable(NamedTuple):
     jclass: jax.Array      # int32 JobClass
     submit: jax.Array      # int32 tick
     state_mib: jax.Array   # int32 checkpoint image size (MiB)
-    # C/R costs precomputed from (cfg.cr_cost / cr_tiers, cfg.cr_overhead,
-    # state_mib): sizes are static per job (until `update_state_mib`), so
-    # the model evaluates once at table build and the passes pay only an
-    # O(1) gather per charge.  cost_save/cost_restore price the FAST tier
-    # (tier 0); cost_save2/cost_restore2 price the DURABLE spill tier
-    # (tier 1) and alias tier 0 when no tiered model is configured.
-    cost_save: jax.Array       # int32 work units charged per checkpoint
-    cost_restore: jax.Array    # int32 work units charged per restore
-    cost_save2: jax.Array      # int32 durable-tier save cost
-    cost_restore2: jax.Array   # int32 durable-tier restore cost
+    # The [J, T] C/R cost lattice, precomputed from (cfg.cr_cost /
+    # cr_tiers, cfg.cr_overhead, state_mib): sizes are static per job
+    # (until `update_state_mib`), so the model evaluates once at table
+    # build and the passes pay only an O(1) gather per charge.  Column k
+    # prices tier k of ``cfg.cr_tiers`` (T=1 untiered); tier 0 is the
+    # fastest tier, the last column the durable spill target.
+    cost_save_lat: jax.Array     # int32 [J, T] FIRST-save cost per tier
+    cost_rsave_lat: jax.Array    # int32 [J, T] RECURRENT (delta) save cost
+    cost_restore_lat: jax.Array  # int32 [J, T] restore cost per tier
     # runtime
     state: jax.Array       # int32 JobState
     progress: jax.Array
@@ -101,6 +111,32 @@ class JobTable(NamedTuple):
     backfilled: jax.Array  # int32 0/1: ever admitted by queue-jumping
     ckpt_tier: jax.Array   # int32 tier holding the latest snapshot (-1: none)
     n_spill: jax.Array     # int32 checkpoints placed beyond the fast tier
+
+    # Legacy two-column accessors, kept as read-only VIEWS over the lattice
+    # during the [J, T] migration (DESIGN.md §Cost lattice).  ``...``
+    # indexing keeps them correct for batched [B, J, T] tables too.  With
+    # T=1 fast==durable (the old untiered aliasing); with T=2 these are
+    # bit-exactly the old columns.  They are deliberately NOT fields: the
+    # column-dataflow contract (`repro.analysis`) tracks lattice columns.
+    @property
+    def cost_save(self) -> jax.Array:
+        """Fast-tier (tier 0) first-save cost — view of cost_save_lat."""
+        return self.cost_save_lat[..., 0]
+
+    @property
+    def cost_save2(self) -> jax.Array:
+        """Durable-tier (last) first-save cost — view of cost_save_lat."""
+        return self.cost_save_lat[..., -1]
+
+    @property
+    def cost_restore(self) -> jax.Array:
+        """Fast-tier restore cost — view of cost_restore_lat."""
+        return self.cost_restore_lat[..., 0]
+
+    @property
+    def cost_restore2(self) -> jax.Array:
+        """Durable-tier restore cost — view of cost_restore_lat."""
+        return self.cost_restore_lat[..., -1]
 
 
 def table_from_jobs(jobs, users, cpu_total: int,
@@ -119,15 +155,13 @@ def table_from_jobs(jobs, users, cpu_total: int,
     j = sorted(jobs, key=lambda x: x.id)
     n = len(j)
     cfg = config if config is not None else SchedulerConfig()
-    tiered = cfg.cr_tiers is not None and cfg.cr_tiers.n_tiers > 1
-    if tiered:
-        assert cfg.cr_tiers.n_tiers == 2, \
-            "the JAX backend models two tiers (fast + durable spill); " \
-            "use the python backend for deeper hierarchies"
-    # durable-tier (spill) costs alias the fast tier when untiered, so the
-    # charging primitives need no config-dependent branching
-    spill = 1 if tiered else 0
+    n_tiers = cfg.n_cost_tiers
     arr = lambda f, d=jnp.int32: jnp.asarray([f(x) for x in j], d)
+    # the [J, T] lattices: evaluated per (job, tier) with Python ints —
+    # the exact arithmetic omfs._evict / _start charge at runtime
+    lat = lambda f: jnp.asarray(
+        [[f(x, k) for k in range(n_tiers)] for x in j],
+        jnp.int32).reshape(n, n_tiers)
     table = JobTable(
         jid=arr(lambda x: x.id),
         user=arr(lambda x: uidx[x.user]),
@@ -137,11 +171,13 @@ def table_from_jobs(jobs, users, cpu_total: int,
         jclass=arr(lambda x: int(x.job_class)),
         submit=arr(lambda x: x.submit_time),
         state_mib=arr(lambda x: x.state_mib),
-        cost_save=arr(lambda x: cfg.eviction_save_cost(x.state_mib)),
-        cost_restore=arr(lambda x: cfg.restart_restore_cost(x.state_mib)),
-        cost_save2=arr(lambda x: cfg.eviction_save_cost(x.state_mib, spill)),
-        cost_restore2=arr(
-            lambda x: cfg.restart_restore_cost(x.state_mib, spill)),
+        cost_save_lat=lat(
+            lambda x, k: cfg.eviction_save_cost(x.state_mib, k)),
+        cost_rsave_lat=lat(
+            lambda x, k: cfg.eviction_save_cost(x.state_mib, k,
+                                                recurrent=True)),
+        cost_restore_lat=lat(
+            lambda x, k: cfg.restart_restore_cost(x.state_mib, k)),
         state=jnp.full((n,), UNSUB, jnp.int32),
         progress=jnp.zeros((n,), jnp.int32),
         run_start=jnp.full((n,), -1, jnp.int32),
@@ -224,14 +260,14 @@ def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
 
     A job with a checkpoint (``n_ckpt > 0``) restarts by restoring its
     latest snapshot, so admission charges the restore cost of the tier the
-    snapshot was *placed* on at eviction (``ckpt_tier``; the cost columns
-    alias each other when untiered) — the twin of ``omfs._start``.  The
-    restore consumes the snapshot: ``ckpt_tier`` clears, freeing the
-    fast-tier capacity for the next victim."""
+    snapshot was *placed* on at eviction (``ckpt_tier``; lattice column 0
+    when untiered) — the twin of ``omfs._start``.  The restore consumes
+    the snapshot: ``ckpt_tier`` clears, freeing the placed tier's capacity
+    for the next victim."""
+    tier = jnp.maximum(tbl.ckpt_tier[idx], 0)
     restore = jnp.where(
         admit & (tbl.n_ckpt[idx] > 0),
-        jnp.where(tbl.ckpt_tier[idx] > 0,
-                  tbl.cost_restore2[idx], tbl.cost_restore[idx]),
+        tbl.cost_restore_lat[idx, tier],
         0)
     return tbl._replace(
         state=tbl.state.at[idx].set(
@@ -247,14 +283,35 @@ def admit_job(tbl: JobTable, idx: jax.Array, t: jax.Array,
     )
 
 
+def effective_save_lat(tbl: JobTable) -> jax.Array:
+    """The ``[J, T]`` save costs evicting each job *now* would charge:
+    recurrent (delta) rows for warm jobs (``n_ckpt > 0`` — they already
+    hold a snapshot), first-save rows otherwise.  Evaluated before the
+    pass bumps ``n_ckpt``, mirroring ``omfs._evict``'s pre-increment
+    ``recurrent`` flag."""
+    return jnp.where((tbl.n_ckpt > 0)[..., None],
+                     tbl.cost_rsave_lat, tbl.cost_save_lat)
+
+
+def tier_occupancy(tbl: JobTable, n_tiers: int) -> jax.Array:
+    """Per-tier MiB held by evicted-and-pending snapshots, ``[T]`` — the
+    twin of ``omfs._tier_occupancy`` (a restore consumes the slot:
+    `admit_job` cleared ``ckpt_tier``)."""
+    held = (tbl.state == PENDING) & (tbl.ckpt_tier >= 0)
+    return jax.ops.segment_sum(
+        jnp.where(held, tbl.state_mib, 0),
+        jnp.clip(tbl.ckpt_tier, 0, n_tiers - 1), num_segments=n_tiers)
+
+
 def victim_order(tbl: JobTable, cheap: bool = False) -> jax.Array:
     """Victim permutation.  Standard: ``(priority, run_start, id)`` —
     queues.running_victim_key.  ``cheap`` (the `omfs_cheap_victim` policy):
     ``(save_cost, priority, run_start, id)`` — cheapest-to-checkpoint
-    first, priced at the fast tier (queues.cheap_victim_key)."""
+    first, priced at the fast tier with the delta-aware effective cost
+    (warm jobs only rewrite their delta — queues.cheap_victim_key)."""
     if cheap:
-        return jnp.lexsort(
-            (tbl.jid, tbl.run_start, tbl.priority, tbl.cost_save))
+        key = effective_save_lat(tbl)[..., 0]
+        return jnp.lexsort((tbl.jid, tbl.run_start, tbl.priority, key))
     return jnp.lexsort((tbl.jid, tbl.run_start, tbl.priority))
 
 
@@ -283,41 +340,52 @@ def select_victims(tbl: JobTable, evictable: jax.Array, idle: jax.Array,
 def place_checkpoints(cfg: SchedulerConfig, tbl: JobTable, ckpt: jax.Array,
                       order: Optional[jax.Array] = None,
                       ) -> Tuple[jax.Array, jax.Array]:
-    """Tier placement for the ``ckpt`` victims: greedy cheapest-feasible in
-    victim ``order``, spilling to the durable tier when the fast tier is
-    full.  Returns ``(take_fast[J], save_cost[J])``.
+    """Tier placement for the ``ckpt`` victims: greedy cheapest-feasible
+    over the T lattice columns in victim ``order``, spilling down the
+    hierarchy when capacity-bounded tiers are full.  Returns
+    ``(tier[J], save_cost[J])`` (tier 0 / cost 0 on non-victims).
 
-    Occupancy counts evicted-and-pending jobs holding a fast-tier snapshot
-    (a restore consumed the slot — `admit_job` cleared the tier), plus the
-    victims placed earlier in this very batch: the ``lax.scan`` walks the
-    batch in victim order so a victim that doesn't fit spills while a
-    later, smaller one may still claim the remaining space — exactly the
+    Per victim the chosen tier is the first-occurrence ``argmin`` of its
+    *effective* (delta-aware) save row over feasible tiers — bit-identical
+    to `TieredCRCostModel.choose_tier`'s ascending scan with ties toward
+    the faster tier, the last tier always feasible (UNBOUNDED invariant).
+    Occupancy counts evicted-and-pending snapshots per tier (a restore
+    consumed the slot — `admit_job` cleared the tier), plus the victims
+    placed earlier in this very batch: the ``lax.scan`` walks the batch in
+    victim order so a victim that doesn't fit spills while a later,
+    smaller one may still claim the remaining space — exactly the
     sequential greedy the Python reference performs per `_evict` call."""
     tiers = cfg.cr_tiers
     assert tiers is not None
-    cap0 = tiers.capacity_mib[0]
+    n_tiers = tiers.n_tiers
+    caps = jnp.asarray(tiers.capacity_mib, jnp.int32)
     if order is None:
         order = victim_order(tbl)
     ckpt_sorted = ckpt[order]
-    # prefer the fast tier only where it is actually the cheaper save
-    # (ties break toward the faster tier, TieredCRCostModel.choose_tier)
-    want0 = ckpt_sorted & (tbl.cost_save <= tbl.cost_save2)[order]
-    if cap0 < 0:                       # unbounded fast tier: no spilling
-        take0_sorted = want0
+    lat_sorted = effective_save_lat(tbl)[order]          # [J, T]
+    if all(c < 0 for c in tiers.capacity_mib):
+        # every tier unbounded: no occupancy to carry, pure row-argmin
+        tier_sorted = jnp.argmin(lat_sorted, axis=1).astype(jnp.int32)
     else:
-        held0 = (tbl.state == PENDING) & (tbl.ckpt_tier == 0)
-        occ0 = jnp.sum(jnp.where(held0, tbl.state_mib, 0))
-        mib_sorted = jnp.where(want0, tbl.state_mib[order], 0)
+        occ0 = tier_occupancy(tbl, n_tiers)
+        mib_sorted = jnp.where(ckpt_sorted, tbl.state_mib[order], 0)
 
         def place(occ, x):
-            want, mib = x
-            take = want & (occ + mib <= cap0)
-            return occ + jnp.where(take, mib, 0), take
+            want, mib, costs = x
+            feasible = (caps < 0) | (occ + mib <= caps)
+            tier = jnp.argmin(
+                jnp.where(feasible, costs, MASK)).astype(jnp.int32)
+            taken = jnp.where(want & (jnp.arange(n_tiers) == tier), mib, 0)
+            return occ + taken, tier
 
-        _, take0_sorted = jax.lax.scan(place, occ0, (want0, mib_sorted))
-    take_fast = jnp.zeros_like(ckpt).at[order].set(take0_sorted)
-    save = jnp.where(take_fast, tbl.cost_save, tbl.cost_save2)
-    return take_fast, save
+        _, tier_sorted = jax.lax.scan(
+            place, occ0, (ckpt_sorted, mib_sorted, lat_sorted))
+    tier_sorted = jnp.where(ckpt_sorted, tier_sorted, 0)
+    tier = jnp.zeros_like(tbl.ckpt_tier).at[order].set(tier_sorted)
+    save = jnp.take_along_axis(
+        effective_save_lat(tbl), tier[:, None], axis=1)[:, 0]
+    save = jnp.where(ckpt, save, 0)
+    return tier, save
 
 
 def _tiered(cfg: SchedulerConfig) -> bool:
@@ -339,12 +407,13 @@ def plan_evictions(cfg: SchedulerConfig, tbl: JobTable, evictable: jax.Array,
       placement deferred to `place_checkpoints` inside `apply_evictions`.
     * ``"pallas"`` / ``"pallas_interpret"`` — the fused
       `kernels.sched_select` kernel: masked bitonic sort + prefix-sum
-      cutoff + greedy fast-tier placement in one ``pallas_call``
-      (interpret mode off-TPU, or always for ``"pallas_interpret"``).
-      Placement here is computed on the pre-feasibility-mask ``planned``;
-      callers mask ``planned`` with an all-or-nothing scalar, and every
-      table write in `apply_evictions` is gated on the masked victim set,
-      so the results are bit-identical either way.
+      cutoff + greedy T-tier placement over the effective save lattice in
+      one ``pallas_call`` (interpret mode off-TPU, or always for
+      ``"pallas_interpret"``).  Placement here is computed on the
+      pre-feasibility-mask ``planned``; callers mask ``planned`` with an
+      all-or-nothing scalar, and every table write in `apply_evictions` is
+      gated on the masked victim set, so the results are bit-identical
+      either way.
 
     The dispatch is a static Python branch on the (hashable, jit-static)
     config, so each backend traces its own program — toggling the flag
@@ -364,25 +433,26 @@ def plan_evictions(cfg: SchedulerConfig, tbl: JobTable, evictable: jax.Array,
     interpret = (backend == "pallas_interpret"
                  or jax.default_backend() != "tpu")
     tiered = _tiered(cfg)
+    eff_lat = effective_save_lat(tbl)
     if tiered:
-        cap0 = cfg.cr_tiers.capacity_mib[0]
-        bounded = cap0 >= 0
-        held0 = (tbl.state == PENDING) & (tbl.ckpt_tier == 0)
-        occ0 = jnp.sum(jnp.where(held0, tbl.state_mib, 0))
-        want0 = (tbl.jclass == CKPT) & (tbl.cost_save <= tbl.cost_save2)
+        caps = tuple(cfg.cr_tiers.capacity_mib)
+        bounded = any(c >= 0 for c in caps)
+        occ = tier_occupancy(tbl, cfg.cr_tiers.n_tiers)
+        is_ckpt = tbl.jclass == CKPT
     else:
-        cap0, bounded = 0, False
-        occ0 = jnp.int32(0)
-        want0 = jnp.zeros_like(evictable)
-    planned, enough, take_fast = plan_evictions_fused(
-        tbl.priority, tbl.run_start, tbl.jid, tbl.cost_save,
-        evictable, tbl.cpus, tbl.state_mib, want0,
-        idle, cpus_needed, occ0, max(cap0, 0),
+        caps = (-1,)
+        bounded = False
+        occ = jnp.zeros((1,), jnp.int32)
+        is_ckpt = jnp.zeros_like(evictable)
+    planned, enough, tier = plan_evictions_fused(
+        tbl.priority, tbl.run_start, tbl.jid, eff_lat[..., 0],
+        evictable, tbl.cpus, tbl.state_mib, is_ckpt, eff_lat,
+        idle, cpus_needed, occ, jnp.asarray(caps, jnp.int32),
         cheap=cheap, tiered=tiered, bounded=bounded, interpret=interpret)
     placement = None
     if tiered:
-        placement = (take_fast,
-                     jnp.where(take_fast, tbl.cost_save, tbl.cost_save2))
+        save = jnp.take_along_axis(eff_lat, tier[:, None], axis=1)[:, 0]
+        placement = (tier, save)
     return planned, enough, None, placement
 
 
@@ -402,12 +472,11 @@ def apply_evictions(cfg: SchedulerConfig, t: jax.Array, tbl: JobTable,
     kill = planned & ~is_ckpt
     ckpt = planned & is_ckpt
     if _tiered(cfg):
-        take_fast, save_cost = (place_checkpoints(cfg, tbl, ckpt, order)
-                                if placement is None else placement)
-        tier_of = jnp.where(take_fast, 0, 1)
-        spilled = ckpt & ~take_fast
+        tier_of, save_cost = (place_checkpoints(cfg, tbl, ckpt, order)
+                              if placement is None else placement)
+        spilled = ckpt & (tier_of > 0)
     else:
-        save_cost = tbl.cost_save
+        save_cost = effective_save_lat(tbl)[..., 0]
         tier_of = jnp.zeros_like(tbl.ckpt_tier)
         spilled = jnp.zeros_like(ckpt)
     return tbl._replace(
@@ -655,20 +724,18 @@ def update_state_mib(tbl: JobTable, idx, state_mib,
     ``config`` must be the same (static) config the pass runs under.
     """
     mib = jnp.clip(jnp.asarray(state_mib, jnp.int32), 0, MAX_STATE_MIB)
-    tiered = config.cr_tiers is not None and config.cr_tiers.n_tiers > 1
-    spill = 1 if tiered else 0
     flat = config.cr_overhead
-    s0 = flat + config.tier_model(0).save_cost(mib)
-    r0 = config.tier_model(0).restore_cost(mib)
-    s1 = flat + config.tier_model(spill).save_cost(mib)
-    r1 = config.tier_model(spill).restore_cost(mib)
-    as32 = lambda v: jnp.asarray(v, jnp.int32)
+    models = [config.tier_model(k) for k in range(config.n_cost_tiers)]
+    row = lambda vals: jnp.stack(
+        [jnp.asarray(v, jnp.int32) for v in vals])
+    save_row = row([flat + m.save_cost(mib) for m in models])
+    rsave_row = row([flat + m.recurrent_save_cost(mib) for m in models])
+    restore_row = row([m.restore_cost(mib) for m in models])
     return tbl._replace(
         state_mib=tbl.state_mib.at[idx].set(mib),
-        cost_save=tbl.cost_save.at[idx].set(as32(s0)),
-        cost_restore=tbl.cost_restore.at[idx].set(as32(r0)),
-        cost_save2=tbl.cost_save2.at[idx].set(as32(s1)),
-        cost_restore2=tbl.cost_restore2.at[idx].set(as32(r1)),
+        cost_save_lat=tbl.cost_save_lat.at[idx].set(save_row),
+        cost_rsave_lat=tbl.cost_rsave_lat.at[idx].set(rsave_row),
+        cost_restore_lat=tbl.cost_restore_lat.at[idx].set(restore_row),
     )
 
 
@@ -696,7 +763,8 @@ def pad_table(tbl: JobTable, rows: int) -> JobTable:
     return JobTable(**{
         f: jnp.concatenate(
             [getattr(tbl, f),
-             jnp.full((k,), _PAD_VALUES.get(f, 0), jnp.int32)])
+             jnp.full((k,) + getattr(tbl, f).shape[1:],
+                      _PAD_VALUES.get(f, 0), jnp.int32)])
         for f in JobTable._fields})
 
 
@@ -740,7 +808,8 @@ def insert_rows(tbl: JobTable, slots: jax.Array, rows: JobTable,
     boundaries never re-trace (`python -m repro.analysis`, rule: retrace).
     """
     def put(col, new):
-        return col.at[slots].set(jnp.where(valid, new, col[slots]))
+        v = valid.reshape(valid.shape + (1,) * (col.ndim - 1))
+        return col.at[slots].set(jnp.where(v, new, col[slots]))
 
     return JobTable(*[put(getattr(tbl, f), getattr(rows, f))
                       for f in JobTable._fields])

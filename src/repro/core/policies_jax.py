@@ -16,15 +16,16 @@ head reservation) through the ``fori_loop`` carry: O(1) per queue position
 for everything but backfill's once-per-tick reservation sort.
 
 Size-aware C/R costs come for free: the shared `admit_job` /
-`apply_evictions` primitives charge the JobTable's precomputed
-``cost_restore`` / ``cost_save`` columns (`core.crcost`), so backfill_cr's
-preemptions and every restart pay the same size-dependent overhead as the
-Python twins.  The same holds for tiered eviction placement
-(``cfg.cr_tiers``): `apply_evictions` places each backfill_cr victim's
-snapshot (fast tier or durable spill, in the standard victim order — the
-same order `baselines.make_backfill` walks `sorted_victims`) and
-`admit_job` charges the placed tier's restore cost, with no
-baseline-specific code here.
+`apply_evictions` primitives charge the JobTable's precomputed ``[J, T]``
+cost lattice (``cost_save_lat`` / ``cost_rsave_lat`` / ``cost_restore_lat``,
+`core.crcost`), so backfill_cr's preemptions and every restart pay the same
+size- and delta-dependent overhead as the Python twins (first saves price
+the full image, recurrent saves the measured delta).  The same holds for
+tiered eviction placement (``cfg.cr_tiers``): `apply_evictions` places each
+backfill_cr victim's snapshot (cheapest feasible tier across the whole
+hierarchy, in the standard victim order — the same order
+`baselines.make_backfill` walks `sorted_victims`) and `admit_job` charges
+the placed tier's restore cost, with no baseline-specific code here.
 """
 from __future__ import annotations
 

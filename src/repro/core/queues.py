@@ -48,12 +48,16 @@ def cheap_victim_key(state: ClusterState) -> Callable[[Job], Tuple]:
 
     The ordering cost is the *fast-tier* save cost (tier 0 of
     ``cfg.cr_tiers``, or ``cfg.cr_cost``), the same number the JAX backend
-    precomputes as ``JobTable.cost_save``; the tier actually charged is
-    still chosen at eviction time (capacity may force a spill)."""
+    precomputes as column 0 of ``JobTable.cost_save_lat`` /
+    ``cost_rsave_lat``; the tier actually charged is still chosen at
+    eviction time (capacity may force a spill).  Delta-aware: a warm job
+    (one that already holds a snapshot) is priced at its recurrent cost —
+    what evicting it *actually* costs — so warm jobs sort cheaper."""
     cfg = state.config
 
     def key(job: Job) -> Tuple:
-        return (cfg.eviction_save_cost(job.state_mib),
+        return (cfg.eviction_save_cost(job.state_mib, 0,
+                                       recurrent=job.n_checkpoints > 0),
                 job.priority, job.run_start, job.id)
 
     return key

@@ -124,10 +124,20 @@ class SchedulerConfig:
             return self.cr_tiers.tiers[tier]
         return self.cr_cost
 
-    def eviction_save_cost(self, state_mib: int, tier: int = 0) -> int:
+    @property
+    def n_cost_tiers(self) -> int:
+        """Number of cost-lattice columns T (1 when untiered)."""
+        return self.cr_tiers.n_tiers if self.cr_tiers is not None else 1
+
+    def eviction_save_cost(self, state_mib: int, tier: int = 0,
+                           recurrent: bool = False) -> int:
         """Work units charged when a checkpointable victim lands on ``tier``
-        (legacy flat cr_overhead + the tier's size-dependent save cost)."""
-        return self.cr_overhead + self.tier_model(tier).save_cost(state_mib)
+        (legacy flat cr_overhead + the tier's size-dependent save cost).
+        ``recurrent`` prices a re-eviction of a job that already saved a
+        snapshot once — only the delta moves."""
+        model = self.tier_model(tier)
+        cost = model.recurrent_save_cost if recurrent else model.save_cost
+        return self.cr_overhead + cost(state_mib)
 
     def restart_restore_cost(self, state_mib: int, tier: int = 0) -> int:
         """Work units charged when a checkpointed job restarts from ``tier``."""

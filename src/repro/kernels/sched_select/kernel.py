@@ -7,22 +7,28 @@ One ``pallas_call`` fuses the whole per-eviction decision that
 * masked victim keys — non-evictable rows pushed to ``MASK`` so the sort
   brings the victim candidates to the front in victim-key order
   (faithful ``(priority, run_start, jid)`` or cheap-victim
-  ``(cost_save, priority, run_start, jid)``), with the row index as a
-  final tie-break so the order is total;
+  ``(save_cost, priority, run_start, jid)`` — the save cost being the
+  delta-aware effective tier-0 column), with the row index as a final
+  tie-break so the order is total;
 * a bitonic sort over the padded power-of-two tile, written as roll-based
   compare-exchange (partner ``i ^ j`` = ``roll(x, -j)`` where bit ``j`` of
   ``i`` is clear, ``roll(x, +j)`` where set) so it is gather-free — VPU
   selects and lane rotations only, the layout Mosaic lowers well;
 * a Hillis-Steele log-step prefix sum of the freed CPUs and the paper's
   minimal-prefix capacity cutoff;
-* the greedy cheapest-feasible fast-tier placement scan, bounded by the
-  last planned position (the victim prefix), not the full tile.
+* the greedy cheapest-feasible T-tier placement over the ``[J, T]``
+  effective save-cost lattice (the T columns ride the sort as extra value
+  rows), bounded by the last planned position (the victim prefix), not
+  the full tile.  Tier choice is a static ascending strict-``<`` argmin —
+  first-occurrence semantics, bit-identical to
+  `TieredCRCostModel.choose_tier` (ties toward the faster tier).
 
 Everything is int32 on ``[1, Jp]`` tiles (`Jp` = padded length, a multiple
 of 128), so the kernel inherits the engine's integer-grid bit-exactness:
 there is no arithmetic here that could round differently from the lax
 path.  The stage loops carry traced ``(k, j)`` shift amounts, so the
-traced program is O(1) in ``Jp`` — only the runtime loop trip counts grow.
+traced program is O(1) in ``Jp``; the per-tier placement unroll is O(T) —
+T is a small static (2-4 in practice).
 
 On CPU (and in CI) the kernel runs in interpret mode; the roll/select
 formulation is chosen for the TPU lowering, where the fused kernel keeps
@@ -35,7 +41,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-#: key for masked (non-evictable / padding) rows — sorts after any real key
+#: key for masked (non-evictable / padding) rows — sorts after any real key;
+#: also the infeasible-tier sentinel in the placement argmin
 MASK = jnp.iinfo(jnp.int32).max
 
 
@@ -49,18 +56,25 @@ def _lex_lt(a, b):
     return lt
 
 
-def sched_select_kernel(prio_ref, rstart_ref, jid_ref, csave_ref, evict_ref,
-                        cpus_ref, mib_ref, want0_ref, scal_ref,
-                        row_ref, planned_ref, take_ref, enough_ref,
-                        *, cheap: bool, tiered: bool, bounded: bool):
-    """Fused plan: sorted-order rows, victim mask, fast-tier placement.
+def sched_select_kernel(prio_ref, rstart_ref, jid_ref, key_ref, evict_ref,
+                        cpus_ref, mib_ref, ckpt_ref, *rest,
+                        cheap: bool, tiered: bool, bounded: bool,
+                        n_tiers: int):
+    """Fused plan: sorted-order rows, victim mask, T-tier placement.
 
-    Inputs are ``[1, Jp]`` int32 (Jp a power of two >= 128); ``scal_ref``
-    is ``[1, 4]`` packing (idle, cpus_needed, occ0, cap0).  Outputs:
-    ``row_ref``/``planned_ref``/``take_ref`` are the sorted-position row
-    index / planned-victim flag / fast-tier flag (scattered back to row
-    order by the wrapper), ``enough_ref`` is the scalar feasibility bit.
+    Inputs are ``[1, Jp]`` int32 (Jp a power of two >= 128): the victim-key
+    columns, the evictable/cpus columns, ``mib_ref``/``ckpt_ref`` (state
+    size and checkpointability) and — in ``rest`` — the ``n_tiers``
+    effective save-lattice columns followed by ``scal_ref``, a
+    ``[1, 2 + 2T]`` pack of (idle, cpus_needed, occ[0..T-1], cap[0..T-1]).
+    Outputs (the tail of ``rest``): ``row_ref``/``planned_ref``/``tier_ref``
+    are the sorted-position row index / planned-victim flag / placed tier
+    (scattered back to row order by the wrapper), ``enough_ref`` is the
+    scalar feasibility bit.
     """
+    lat_refs = rest[:n_tiers]
+    scal_ref = rest[n_tiers]
+    row_ref, planned_ref, tier_ref, enough_ref = rest[n_tiers + 1:]
     shape = prio_ref.shape
     jp = shape[1]
     idx = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
@@ -74,11 +88,12 @@ def sched_select_kernel(prio_ref, rstart_ref, jid_ref, csave_ref, evict_ref,
     # stable, but every real tie is already broken by the unique jid)
     keys = [masked(prio_ref), masked(rstart_ref), masked(jid_ref), idx]
     if cheap:
-        keys.insert(0, masked(csave_ref))
+        keys.insert(0, masked(key_ref))
     n_keys = len(keys)
     vals = [evict, cpus_ref[...]]
     if tiered:
-        vals += [mib_ref[...], want0_ref[...]]
+        vals += [mib_ref[...], ckpt_ref[...]]
+        vals += [r[...] for r in lat_refs]
     arrays = tuple(keys + vals)
 
     def partner(x, j):
@@ -123,33 +138,51 @@ def sched_select_kernel(prio_ref, rstart_ref, jid_ref, csave_ref, evict_ref,
     enough_ref[0, 0] = (idle + cum[0, jp - 1] >= cpus_needed).astype(jnp.int32)
 
     if not tiered:
-        take = jnp.zeros(shape, jnp.int32)
+        tier = jnp.zeros(shape, jnp.int32)
     else:
+        mib_s = arrays[n_keys + 2]
         want = planned & (arrays[n_keys + 3] == 1)
-        if not bounded:                        # unbounded fast tier
-            take = want.astype(jnp.int32)
+        lats = arrays[n_keys + 4:]
+        if not bounded:            # every tier unbounded: elementwise argmin
+            best_c, best_t = lats[0], jnp.zeros(shape, jnp.int32)
+            for k in range(1, n_tiers):
+                better = lats[k] < best_c      # strict: ties keep lower k
+                best_c = jnp.where(better, lats[k], best_c)
+                best_t = jnp.where(better, k, best_t)
+            tier = jnp.where(want, best_t, 0)
         else:
-            occ0 = scal_ref[0, 2]
-            cap0 = scal_ref[0, 3]
-            mib_s = arrays[n_keys + 2]
             want_i = want.astype(jnp.int32)
+            occs = tuple(scal_ref[0, 2 + k] for k in range(n_tiers))
+            caps = tuple(scal_ref[0, 2 + n_tiers + k] for k in range(n_tiers))
             # greedy is sequential by nature (a skipped victim frees space a
             # later smaller one may claim) but only over the victim prefix
             stop = jnp.max(jnp.where(planned, idx + 1, 0))
 
-            def greedy(i, carry):
-                occ, take = carry
-                w = jax.lax.dynamic_slice(want_i, (0, i), (1, 1))[0, 0]
-                m = jax.lax.dynamic_slice(mib_s, (0, i), (1, 1))[0, 0]
-                ok = (w == 1) & (occ + m <= cap0)
-                occ = occ + jnp.where(ok, m, 0)
-                take = jax.lax.dynamic_update_slice(
-                    take, ok.astype(jnp.int32)[None, None], (0, i))
-                return occ, take
+            def at(x, i):
+                return jax.lax.dynamic_slice(x, (0, i), (1, 1))[0, 0]
 
-            _, take = jax.lax.fori_loop(
-                0, stop, greedy, (occ0, jnp.zeros(shape, jnp.int32)))
+            def greedy(i, carry):
+                occs, tier = carry
+                w = at(want_i, i)
+                m = at(mib_s, i)
+                best_c = jnp.int32(MASK)
+                best_t = jnp.int32(0)
+                for k in range(n_tiers):       # static unroll, T is small
+                    feas = (caps[k] < 0) | (occs[k] + m <= caps[k])
+                    c = jnp.where(feas, at(lats[k], i), MASK)
+                    better = c < best_c        # strict: ties keep lower k
+                    best_c = jnp.where(better, c, best_c)
+                    best_t = jnp.where(better, k, best_t)
+                occs = tuple(
+                    occs[k] + jnp.where((w == 1) & (best_t == k), m, 0)
+                    for k in range(n_tiers))
+                tier = jax.lax.dynamic_update_slice(
+                    tier, jnp.where(w == 1, best_t, 0)[None, None], (0, i))
+                return occs, tier
+
+            _, tier = jax.lax.fori_loop(
+                0, stop, greedy, (occs, jnp.zeros(shape, jnp.int32)))
 
     row_ref[...] = row_s
     planned_ref[...] = planned.astype(jnp.int32)
-    take_ref[...] = take
+    tier_ref[...] = tier

@@ -3,9 +3,10 @@
 `plan_evictions_fused` is what `core/omfs_jax.plan_evictions` dispatches
 to when ``SchedulerConfig.kernel_backend`` selects the pallas path.  The
 wrapper pads the columns to a power-of-two ``[1, Jp]`` tile (Jp >= 128,
-pad rows carry ``evictable=0`` so the in-kernel mask retires them), packs
-the four scalars, and scatters the sorted-position outputs back to row
-order — the only pieces kept outside the kernel, both O(J).
+pad rows carry ``evictable=0`` so the in-kernel mask retires them),
+splits the ``[J, T]`` effective save lattice into T tile rows, packs the
+``2 + 2T`` scalars, and scatters the sorted-position outputs back to row
+order — the only pieces kept outside the kernel, all O(J).
 
 Outputs are bit-identical to `ref.plan_evictions_ref` (and hence to the
 lax path) by construction: the kernel's masked total order restricted to
@@ -33,39 +34,47 @@ def _padded_len(j: int) -> int:
 
 
 @partial(jax.jit, static_argnames=("cheap", "tiered", "bounded", "interpret"))
-def plan_evictions_fused(prio, run_start, jid, cost_save, evictable, cpus,
-                         state_mib, want0, idle, cpus_needed, occ0, cap0,
-                         *, cheap: bool = False, tiered: bool = False,
-                         bounded: bool = False, interpret: bool = True):
+def plan_evictions_fused(prio, run_start, jid, key_cost, evictable, cpus,
+                         state_mib, is_ckpt, save_lat, idle, cpus_needed,
+                         occ, cap, *, cheap: bool = False,
+                         tiered: bool = False, bounded: bool = False,
+                         interpret: bool = True):
     """Fused plan over bare columns.
 
     ``planned`` is the paper's minimal victim prefix (lines 32-36) in the
-    requested victim-key order, ``enough`` the feasibility bit, and
-    ``take_fast`` the greedy fast-tier placement of the checkpointable
-    planned victims (all-False when ``tiered=False``).  ``bounded`` is the
-    static "fast tier has finite capacity" flag; ``occ0``/``cap0`` are
-    ignored unless set.  Returns ``(planned[J] bool, enough bool,
-    take_fast[J] bool)``.
+    requested victim-key order (``key_cost`` — the delta-aware effective
+    tier-0 save cost — leads the key when ``cheap``), ``enough`` the
+    feasibility bit, and ``tier`` the greedy cheapest-feasible placement
+    of the checkpointable planned victims over the ``[J, T]`` effective
+    save lattice (all-zero when ``tiered=False``).  ``occ``/``cap`` are
+    ``[T]`` per-tier occupancy/capacity vectors (``cap[k] < 0`` =
+    unbounded); ``bounded`` is the static "some tier has finite capacity"
+    flag.  Returns ``(planned[J] bool, enough bool, tier[J] int32)``.
     """
     j = prio.shape[0]
     jp = _padded_len(j)
+    n_tiers = save_lat.shape[1]
 
     def col(x):
         x = jnp.asarray(x, jnp.int32).reshape(1, j)
         return jnp.pad(x, ((0, 0), (0, jp - j)))
 
-    scal = jnp.stack([jnp.asarray(v, jnp.int32)
-                      for v in (idle, cpus_needed, occ0, cap0)]).reshape(1, 4)
-    kern = partial(sched_select_kernel,
-                   cheap=cheap, tiered=tiered, bounded=bounded)
+    lat_cols = [col(save_lat[:, k]) for k in range(n_tiers)]
+    scal = jnp.concatenate([
+        jnp.stack([jnp.asarray(idle, jnp.int32),
+                   jnp.asarray(cpus_needed, jnp.int32)]),
+        jnp.asarray(occ, jnp.int32).reshape(n_tiers),
+        jnp.asarray(cap, jnp.int32).reshape(n_tiers),
+    ]).reshape(1, 2 + 2 * n_tiers)
+    kern = partial(sched_select_kernel, cheap=cheap, tiered=tiered,
+                   bounded=bounded, n_tiers=n_tiers)
     tile = jax.ShapeDtypeStruct((1, jp), jnp.int32)
-    row_s, planned_s, take_s, enough = pl.pallas_call(
+    row_s, planned_s, tier_s, enough = pl.pallas_call(
         kern,
         out_shape=[tile, tile, tile, jax.ShapeDtypeStruct((1, 1), jnp.int32)],
         interpret=interpret,
-    )(col(prio), col(run_start), col(jid), col(cost_save), col(evictable),
-      col(cpus), col(state_mib), col(want0), scal)
+    )(col(prio), col(run_start), col(jid), col(key_cost), col(evictable),
+      col(cpus), col(state_mib), col(is_ckpt), *lat_cols, scal)
     planned = jnp.zeros((jp,), jnp.int32).at[row_s[0]].set(planned_s[0])[:j]
-    take = jnp.zeros((jp,), jnp.int32).at[row_s[0]].set(take_s[0])[:j]
-    return (planned.astype(bool), enough[0, 0].astype(bool),
-            take.astype(bool))
+    tier = jnp.zeros((jp,), jnp.int32).at[row_s[0]].set(tier_s[0])[:j]
+    return planned.astype(bool), enough[0, 0].astype(bool), tier

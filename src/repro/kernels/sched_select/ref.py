@@ -4,6 +4,13 @@ Spells the exact ``jnp.lexsort`` + cumsum + ``lax.scan`` sequence that
 ``core/omfs_jax.py``'s ``victim_order`` / ``select_victims`` /
 ``place_checkpoints`` perform, but over bare columns — the oracle the
 kernel's property tests compare against without importing the JobTable.
+
+Placement is T-tier: ``save_lat`` is the ``[J, T]`` effective save-cost
+lattice (delta-aware — the caller already selected first vs recurrent
+rows), ``occ``/``cap`` are ``[T]`` occupancy/capacity vectors, and the
+chosen tier per victim is the first-occurrence argmin over feasible
+columns (`TieredCRCostModel.choose_tier` semantics: ties toward the
+faster tier, the last tier always feasible).
 """
 from __future__ import annotations
 
@@ -12,14 +19,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+MASK = jnp.int32(jnp.iinfo(jnp.int32).max)
+
 
 @partial(jax.jit, static_argnames=("cheap", "tiered", "bounded"))
-def plan_evictions_ref(prio, run_start, jid, cost_save, evictable, cpus,
-                       state_mib, want0, idle, cpus_needed, occ0, cap0,
-                       *, cheap: bool = False, tiered: bool = False,
+def plan_evictions_ref(prio, run_start, jid, key_cost, evictable, cpus,
+                       state_mib, is_ckpt, save_lat, idle, cpus_needed,
+                       occ, cap, *, cheap: bool = False, tiered: bool = False,
                        bounded: bool = False):
-    """Returns ``(planned[J], enough, take_fast[J])`` — see ops.py."""
-    keys = ((jid, run_start, prio, cost_save) if cheap
+    """Returns ``(planned[J], enough, tier[J])`` — see ops.py."""
+    keys = ((jid, run_start, prio, key_cost) if cheap
             else (jid, run_start, prio))
     order = jnp.lexsort(keys)
     evictable = evictable.astype(bool)
@@ -31,19 +40,26 @@ def plan_evictions_ref(prio, run_start, jid, cost_save, evictable, cpus,
     enough = idle + freed_cum[-1] >= cpus_needed
     planned = jnp.zeros_like(evictable).at[order].set(planned_sorted)
     if not tiered:
-        return planned, enough, jnp.zeros_like(evictable)
-    want_sorted = planned_sorted & want0.astype(bool)[order]
-    if not bounded:
-        take_sorted = want_sorted
+        return planned, enough, jnp.zeros_like(jid)
+    n_tiers = save_lat.shape[1]
+    cap = jnp.asarray(cap, jnp.int32)
+    want_sorted = planned_sorted & is_ckpt.astype(bool)[order]
+    lat_sorted = save_lat[order]
+    if not bounded:                 # every tier unbounded: pure row-argmin
+        tier_sorted = jnp.argmin(lat_sorted, axis=1).astype(jnp.int32)
     else:
         mib_sorted = jnp.where(want_sorted, state_mib[order], 0)
 
-        def place(occ, x):
-            want, mib = x
-            take = want & (occ + mib <= cap0)
-            return occ + jnp.where(take, mib, 0), take
+        def place(o, x):
+            want, mib, costs = x
+            feasible = (cap < 0) | (o + mib <= cap)
+            t = jnp.argmin(jnp.where(feasible, costs, MASK)).astype(jnp.int32)
+            taken = jnp.where(want & (jnp.arange(n_tiers) == t), mib, 0)
+            return o + taken, t
 
-        _, take_sorted = jax.lax.scan(
-            place, jnp.asarray(occ0, jnp.int32), (want_sorted, mib_sorted))
-    take_fast = jnp.zeros_like(evictable).at[order].set(take_sorted)
-    return planned, enough, take_fast
+        _, tier_sorted = jax.lax.scan(
+            place, jnp.asarray(occ, jnp.int32),
+            (want_sorted, mib_sorted, lat_sorted))
+    tier_sorted = jnp.where(want_sorted, tier_sorted, 0)
+    tier = jnp.zeros_like(jid).at[order].set(tier_sorted)
+    return planned, enough, tier

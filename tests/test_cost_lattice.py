@@ -1,0 +1,298 @@
+"""[J, T] cost lattice + delta-aware recurrent saves (DESIGN.md §Cost
+lattice): Python <-> JAX bit-equality for arbitrary tier counts on both
+kernel backends, the T=2 degeneracy guarantee for every registered policy,
+first-vs-recurrent pricing through evict -> restore -> evict cycles, and
+the unified ``calibrate(tiers=...)`` entry with its deprecation shims."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+from repro.core.crcost import (
+    MEASURED_DELTA_FRAC,
+    MEASURED_DELTA_ZSTD,
+    UNBOUNDED,
+    CRCostModel,
+    TieredCRCostModel,
+    measured_delta_num,
+)
+from repro.core.types import SchedulerConfig
+from repro.core.workload import (
+    WorkloadSpec,
+    make_jobs,
+    make_users,
+    thrashing_scenario,
+)
+from repro.obs.events import canonical_sort
+
+POLICY_NAMES = sorted(engine.POLICIES)
+BACKENDS = ("lax", "pallas_interpret")
+DELTA = measured_delta_num()        # 182/256: the bench_cr_cost blend
+
+#: per-tier save bandwidths, fastest first (HBM / DRAM / NVMe / object)
+BWS = (16384, 4096, 1024, 128)
+
+
+def _with_backend(cfg, backend):
+    return cfg if backend == "lax" else dataclasses.replace(
+        cfg, kernel_backend=backend)
+
+
+def _lattice(n_tiers, cap0_mib, delta_num, delta_den=1):
+    """A T-deep hierarchy: geometric capacities over a shared delta model."""
+    if cap0_mib == UNBOUNDED:
+        caps = (UNBOUNDED,) * n_tiers
+    else:
+        caps = tuple(cap0_mib * (k + 1)
+                     for k in range(n_tiers - 1)) + (UNBOUNDED,)
+    tiers = tuple(
+        CRCostModel(save_mib_per_tick=BWS[k], restore_mib_per_tick=2 * BWS[k],
+                    save_base=min(k, 2), delta_num=delta_num,
+                    delta_den=delta_den)
+        for k in range(n_tiers))
+    return TieredCRCostModel(tiers=tiers, capacity_mib=caps)
+
+
+def _workload(seed, n_users=3, horizon=100, cpu_total=32):
+    spec = WorkloadSpec(n_users=n_users, horizon=horizon, cpu_total=cpu_total,
+                        seed=seed, arrival_rate=0.12, mean_work=30,
+                        class_mix=(0.15, 0.35, 0.5))
+    users = make_users(spec)
+    jobs = make_jobs(spec, users)[:35]
+    return users, jobs
+
+
+# ---------------------------------------------------------------------------
+# model semantics: the two-coefficient (first, recurrent) pricing
+# ---------------------------------------------------------------------------
+
+
+def test_delta_model_semantics():
+    m = CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256,
+                    delta_num=DELTA, delta_den=256)
+    assert m.recurrent_save_cost(1000) < m.save_cost(1000)
+    # the delta image on the /256 integer grid: ceil(mib * 182 / 256)
+    assert m.delta_mib(1000) == -(-1000 * DELTA // 256)
+    # default coefficients (1, 1) are exact legacy pricing
+    legacy = CRCostModel(save_mib_per_tick=256, restore_mib_per_tick=256)
+    assert legacy.recurrent_save_cost(1000) == legacy.save_cost(1000)
+    # the quantized bench_cr_cost blend: 0.64 * 0.549 + 0.36 ~= 182/256
+    eff = MEASURED_DELTA_FRAC * MEASURED_DELTA_ZSTD + (1 - MEASURED_DELTA_FRAC)
+    assert DELTA == round(eff * 256) == 182
+    assert measured_delta_num(1.0, 0.0) == 256     # no delta savings
+    assert CRCostModel.from_measured(
+        save_bytes_per_s=256 << 20, restore_bytes_per_s=256 << 20,
+        tick_seconds=1.0, delta_ratio=eff).delta_num == DELTA
+
+
+def test_choose_tier_recurrent_uses_delta_costs():
+    """The placement decision itself is delta-aware: a warm job shops with
+    its real (delta) write in hand, which can flip the cheapest tier."""
+    m = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=100, restore_mib_per_tick=100),
+               CRCostModel(save_mib_per_tick=100, restore_mib_per_tick=100,
+                           delta_num=64, delta_den=256)),
+        capacity_mib=(UNBOUNDED, UNBOUNDED))
+    # first save: equal full-image cost, tie breaks toward the faster tier
+    assert m.choose_tier(400, [0, 0]) == 0
+    # recurrent: tier 1 moves a 4x smaller delta image and wins
+    assert m.choose_tier(400, [0, 0], recurrent=True) == 1
+
+
+# ---------------------------------------------------------------------------
+# cross-backend bit-equality, T in {2, 3, 4}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_tiers", [2, 3, 4])
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       # sampled (not free-range) so repeated examples share compiled scans
+       quantum=st.sampled_from([0, 3, 5]),
+       cap0=st.sampled_from([0, 2_000, 50_000, UNBOUNDED]),
+       delta=st.sampled_from([(1, 1), (141, 256), (DELTA, 256)]))
+def test_lattice_fuzz_python_vs_jax(n_tiers, seed, quantum, cap0, delta):
+    """Evict -> restore -> evict sequences over a T-deep lattice: the JAX
+    backend's precomputed first/recurrent columns and T-tier placement scan
+    must charge and place bit-identically to the Python model's runtime
+    evaluation, on both kernel-dispatch paths."""
+    users, jobs = _workload(seed)
+    if not jobs:
+        return
+    cfg = SchedulerConfig(cpu_total=32, quantum=quantum, cr_overhead=1,
+                          cr_tiers=_lattice(n_tiers, cap0, *delta))
+    py = engine.simulate(users, [j.clone() for j in jobs], cfg, 100,
+                         policy="omfs", backend="python")
+    for backend in BACKENDS:
+        jx = engine.simulate(users, jobs, _with_backend(cfg, backend), 100,
+                             policy="omfs", backend="jax")
+        assert py.signature() == jx.signature(), backend
+        assert (py.busy_series() == jx.busy_series()).all(), backend
+        assert py.summary()["spills"] == jx.summary()["spills"], backend
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_t2_lattice_degenerates_to_two_column(policy):
+    """The T=2 lattice with default (1, 1) coefficients IS the legacy
+    two-column model: bit-identical schedules for every registered policy
+    on both kernel backends, and the legacy accessors are exact views over
+    the lattice columns."""
+    users, jobs = _workload(seed=7)
+    cfg = SchedulerConfig(cpu_total=32, quantum=4, cr_overhead=1,
+                          cr_tiers=_lattice(2, 2_000, 1, 1))
+    py = engine.simulate(users, [j.clone() for j in jobs], cfg, 100,
+                         policy=policy, backend="python")
+    for backend in BACKENDS:
+        jx = engine.simulate(users, jobs, _with_backend(cfg, backend), 100,
+                             policy=policy, backend="jax")
+        assert py.signature() == jx.signature(), backend
+        assert (py.busy_series() == jx.busy_series()).all(), backend
+        assert py.summary()["spills"] == jx.summary()["spills"], backend
+    t = jx.table
+    np.testing.assert_array_equal(np.asarray(t.cost_save),
+                                  np.asarray(t.cost_save_lat[:, 0]))
+    np.testing.assert_array_equal(np.asarray(t.cost_save2),
+                                  np.asarray(t.cost_save_lat[:, -1]))
+    np.testing.assert_array_equal(np.asarray(t.cost_restore),
+                                  np.asarray(t.cost_restore_lat[:, 0]))
+    np.testing.assert_array_equal(np.asarray(t.cost_restore2),
+                                  np.asarray(t.cost_restore_lat[:, -1]))
+
+
+def test_recurrent_saves_cheaper_and_bit_equal():
+    """The thrashing ping-pong is the recurrent-save workload: the same
+    victims bounce through evict -> restore -> evict, so every save after
+    the first is priced at the measured delta — strictly cheaper than the
+    delta-free twin, and bit-identical across all three backends."""
+    users, jobs = thrashing_scenario(64, quantum=5)
+    delta_cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_overhead=1,
+                                cr_tiers=_lattice(3, 64 << 10, DELTA, 256))
+    flat_cfg = dataclasses.replace(delta_cfg,
+                                   cr_tiers=_lattice(3, 64 << 10, 1, 1))
+    py = engine.simulate(users, [j.clone() for j in jobs], delta_cfg, 400,
+                         policy="omfs", backend="python")
+    tab = py.sim.job_table()
+    assert max(j.n_checkpoints for j in tab) >= 2, \
+        "no job saved twice — scenario too tame to price recurrence"
+    flat = engine.simulate(users, [j.clone() for j in jobs], flat_cfg, 400,
+                           policy="omfs", backend="python")
+    assert sum(j.overhead for j in tab) < \
+        sum(j.overhead for j in flat.sim.job_table())
+    for backend in BACKENDS:
+        jx = engine.simulate(users, jobs, _with_backend(delta_cfg, backend),
+                             400, policy="omfs", backend="jax")
+        assert py.signature() == jx.signature(), backend
+        assert int(np.asarray(jx.table.overhead).sum()) == \
+            sum(j.overhead for j in tab), backend
+
+
+def test_t4_hierarchy_acceptance():
+    """ISSUE acceptance: a 4-deep HBM/DRAM/NVMe/object-store hierarchy runs
+    on the JAX backend bit-identical to the Python `TieredCRCostModel` —
+    schedules, spill counts, AND lifecycle events — on both `lax` and
+    `pallas_interpret`, with recurrent saves measurably cheaper."""
+    users, jobs = thrashing_scenario(64, quantum=5,
+                                     state_gibs=(128, 64, 32, 16))
+    hier = TieredCRCostModel(
+        tiers=(CRCostModel(save_mib_per_tick=131072,       # HBM
+                           restore_mib_per_tick=262144,
+                           delta_num=DELTA, delta_den=256),
+               CRCostModel(save_mib_per_tick=16384,        # DRAM
+                           restore_mib_per_tick=32768,
+                           delta_num=DELTA, delta_den=256),
+               CRCostModel(save_mib_per_tick=2048,         # NVMe
+                           restore_mib_per_tick=4096, save_base=1,
+                           delta_num=DELTA, delta_den=256),
+               CRCostModel(save_mib_per_tick=256,          # object store
+                           restore_mib_per_tick=512,
+                           save_base=2, restore_base=2,
+                           delta_num=DELTA, delta_den=256)),
+        capacity_mib=(16 << 10, 64 << 10, 160 << 10, UNBOUNDED))
+    cfg = SchedulerConfig(cpu_total=64, quantum=5, cr_overhead=1,
+                          cr_tiers=hier)
+    py = engine.simulate(users, [j.clone() for j in jobs], cfg, 400,
+                         policy="omfs", backend="python", record_events=True)
+    tab = py.sim.job_table()
+    assert max(j.n_checkpoints for j in tab) >= 2
+    assert py.summary()["spills"] > 0, "the deep tiers never engaged"
+    for backend in BACKENDS:
+        jx = engine.simulate(users, jobs, _with_backend(cfg, backend), 400,
+                             policy="omfs", backend="jax",
+                             record_events=True)
+        assert py.signature() == jx.signature(), backend
+        assert (py.busy_series() == jx.busy_series()).all(), backend
+        assert py.summary()["spills"] == jx.summary()["spills"], backend
+        assert canonical_sort(py.events) == canonical_sort(jx.events), backend
+        assert int(np.asarray(jx.table.n_ckpt).max()) >= 2
+        assert int(np.asarray(jx.table.overhead).sum()) == \
+            sum(j.overhead for j in tab), backend
+    # pricing recurrence at the measured delta strictly reduces total C/R
+    flat_tiers = TieredCRCostModel(
+        tiers=tuple(dataclasses.replace(m, delta_num=1, delta_den=1)
+                    for m in hier.tiers),
+        capacity_mib=hier.capacity_mib)
+    flat = engine.simulate(users, [j.clone() for j in jobs],
+                           dataclasses.replace(cfg, cr_tiers=flat_tiers), 400,
+                           policy="omfs", backend="python")
+    assert sum(j.overhead for j in tab) < \
+        sum(j.overhead for j in flat.sim.job_table())
+
+
+# ---------------------------------------------------------------------------
+# the unified calibrate(tiers=...) entry + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_service_calibrate_unified_and_shim(tmp_path, monkeypatch):
+    from repro.checkpoint.manager import ManagerConfig
+    from repro.checkpoint.service import CheckpointService
+
+    svc = CheckpointService(ManagerConfig(root=tmp_path,
+                                          mem_capacity_bytes=2 << 30,
+                                          use_delta=False,
+                                          async_durable=False))
+    try:
+        mem, disk = svc.manager.mem.stats, svc.manager.disk.stats
+        mem.bytes_written, mem.save_seconds = 8000 << 20, 1.0
+        mem.bytes_read, mem.restore_seconds = 8000 << 20, 0.5
+        disk.bytes_written, disk.save_seconds = 400 << 20, 1.0
+        disk.bytes_read, disk.restore_seconds = 400 << 20, 1.0
+        # tiers=None: the flat model, delta-aware
+        flat = svc.calibrate(tick_seconds=0.1, delta_ratio=0.71)
+        assert isinstance(flat, CRCostModel)
+        assert (flat.delta_num, flat.delta_den) == (round(0.71 * 256), 256)
+        # tiers=(...): the lattice, same entry
+        lat = svc.calibrate(tick_seconds=0.1, tiers=("mem", "disk"))
+        assert isinstance(lat, TieredCRCostModel)
+        assert lat.capacity_mib == (2 << 10, UNBOUNDED)
+        # the shim warns and is pure delegation
+        calls = []
+        orig = CheckpointService.calibrate
+        monkeypatch.setattr(
+            CheckpointService, "calibrate",
+            lambda self, *a, **kw: calls.append((a, kw)) or
+            orig(self, *a, **kw))
+        with pytest.warns(DeprecationWarning, match="calibrate_tiered"):
+            m = svc.calibrate_tiered(tick_seconds=0.1)
+        assert calls and calls[0][1]["tiers"] == ("mem", "disk")
+        assert m == lat
+    finally:
+        svc.close()
+
+
+def test_executor_calibrate_tiered_delegates(monkeypatch):
+    from repro.cluster.executor import ClusterExecutor
+
+    ex = ClusterExecutor.__new__(ClusterExecutor)   # the shim needs no state
+    seen = {}
+    monkeypatch.setattr(
+        ClusterExecutor, "calibrate",
+        lambda self, tick_seconds=None, **kw:
+        seen.update(tick_seconds=tick_seconds, **kw) or "model")
+    with pytest.warns(DeprecationWarning, match="calibrate_tiered"):
+        out = ex.calibrate_tiered(0.2, compress_ratio=0.5)
+    assert out == "model"
+    assert seen["tiers"] == ("mem", "disk")
+    assert seen["tick_seconds"] == 0.2 and seen["compress_ratio"] == 0.5

@@ -150,8 +150,9 @@ def test_from_measured_min_representable_bandwidth():
        image_mib=st.integers(1, 1 << 18))
 def test_from_stats_durable_tier_round_trip(mib_per_s, tick_s, image_mib):
     """Measured durable-tier TierStats -> model -> predicted ticks stays on
-    the /256 rational grid: never cheaper than the true transfer time, and
-    never more than one grid step (1/256 of bandwidth) + 1 ceil tick over.
+    the /256 rational grid: the bandwidth quantizes round-to-nearest
+    (within half a grid step of the true rate) and the prediction is
+    EXACTLY the integer ceil on that grid, saturated at ``cap_ticks``.
     This is the disk-tier calibration the tiered placement model feeds on."""
     from repro.checkpoint.tiers import TierStats
 
@@ -164,14 +165,17 @@ def test_from_stats_durable_tier_round_trip(mib_per_s, tick_s, image_mib):
     m = CRCostModel.from_stats(stats, tick_seconds=tick_s)
     true_mib_per_tick = stats.bytes_written / 4.0 * tick_s / MIB
     predicted = m.save_cost(image_mib)
-    ideal = image_mib / true_mib_per_tick
-    # floor-quantized bandwidth can only charge MORE than ideal...
-    assert predicted >= ideal - 1
-    # ...and at most one /256 grid step of bandwidth + the ceil tick
+    # round-to-nearest quantization: within half a /256 grid step
     q = m.save_mib_per_tick / m.save_tick_den
-    assert q <= true_mib_per_tick + 1 / 256
-    worst = image_mib / max(q, 1 / 256)
-    assert predicted <= worst + 1
+    assert abs(q - true_mib_per_tick) <= 1 / 512 + 1e-9
+    # the prediction is the exact integer ceil on the quantized grid,
+    # saturated at the cap — nothing cheaper, nothing float-drifted
+    assert predicted == min(-((-image_mib * 256) // m.save_mib_per_tick),
+                            m.cap_ticks)
+    # and never materially cheaper than the true transfer time (half a
+    # grid step of bandwidth is the worst-case rounding in its favor)
+    floor_bound = image_mib / (true_mib_per_tick + 1 / 512)
+    assert predicted >= min(floor_bound, m.cap_ticks) - 1
 
 
 def test_ticks_from_seconds():

@@ -80,34 +80,46 @@ def _assert_results_equal(a, b):
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_kernel_matches_reference_fuzz(seed):
-    """Random bare columns, every static variant (faithful/cheap ×
-    untiered/unbounded/bounded): planned victims, feasibility bit, and
-    fast-tier placement must match the lexsort reference exactly."""
+    """Random bare columns at random tier counts T ∈ {2, 3, 4}, every
+    static variant (faithful/cheap × untiered/unbounded/bounded): planned
+    victims, feasibility bit, and T-tier lattice placement must match the
+    lexsort reference exactly."""
     rng = np.random.default_rng(seed)
     j = int(rng.integers(1, 300))
+    n_tiers = int(rng.integers(2, 5))
+    save_lat = rng.integers(0, 60, (j, n_tiers)).astype(np.int32)
     cols = dict(
         prio=rng.integers(0, 5, j).astype(np.int32),
         run_start=rng.integers(-1, 40, j).astype(np.int32),
         jid=rng.permutation(j).astype(np.int32),
-        cost_save=rng.integers(0, 60, j).astype(np.int32),
+        key_cost=save_lat[:, 0],
         evictable=rng.random(j) < 0.5,
         cpus=rng.integers(1, 8, j).astype(np.int32),
         state_mib=rng.integers(0, 64, j).astype(np.int32),
-        want0=rng.random(j) < 0.7,
+        is_ckpt=rng.random(j) < 0.7,
+        save_lat=save_lat,
     )
+    occ = rng.integers(0, 128, n_tiers).astype(np.int32)
+    # random finite caps with sporadic unbounded (-1) tiers; the last
+    # tier is always the unbounded spill target (model invariant)
+    cap = rng.integers(0, 256, n_tiers).astype(np.int32)
+    cap[rng.random(n_tiers) < 0.3] = -1
+    cap[-1] = -1
     scalars = dict(idle=int(rng.integers(0, 20)),
                    cpus_needed=int(rng.integers(0, 48)),
-                   occ0=int(rng.integers(0, 128)),
-                   cap0=int(rng.integers(0, 256)))
+                   occ=occ, cap=cap)
     for cheap in (False, True):
         for tiered, bounded in ((False, False), (True, False), (True, True)):
+            sc = dict(scalars)
+            if not bounded:
+                sc["cap"] = np.full(n_tiers, -1, np.int32)
             got = plan_evictions_fused(
-                *cols.values(), *scalars.values(),
+                *cols.values(), *sc.values(),
                 cheap=cheap, tiered=tiered, bounded=bounded, interpret=True)
             want = plan_evictions_ref(
-                *cols.values(), *scalars.values(),
+                *cols.values(), *sc.values(),
                 cheap=cheap, tiered=tiered, bounded=bounded)
-            for name, g, w in zip(("planned", "enough", "take_fast"),
+            for name, g, w in zip(("planned", "enough", "tier"),
                                   got, want):
                 assert np.array_equal(np.asarray(g), np.asarray(w)), (
                     f"{name} cheap={cheap} tiered={tiered} bounded={bounded}")
